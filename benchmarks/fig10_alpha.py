@@ -1,0 +1,68 @@
+"""Fig 10 — decay-rate α sensitivity (+ oracle-regressor upper bound)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import eval_method, get_context, write_result
+from repro.core.funnel import ImportanceFunnel
+from repro.queries.engine import error_metrics
+
+
+def _oracle_groups(contribution, thresholds, candidates):
+    groups = [np.asarray(candidates)]
+    for t in thresholds:
+        tail = groups[-1]
+        pick = contribution[tail] > t
+        groups[-1] = tail[~pick]
+        groups.append(tail[pick])
+    return groups
+
+
+def run(dataset="kdd", budget=0.1, alphas=(1.0, 2.0, 4.0, 8.0)):
+    ctx = get_context(dataset)
+    n = ctx.table.num_partitions
+    b = max(1, int(budget * n))
+    learned, oracle = {}, {}
+    picker = ctx.art.picker
+    for alpha in alphas:
+        old = picker.config.alpha
+        picker.config.alpha = alpha
+        learned[str(alpha)] = eval_method(ctx, "ps3", budget)["avg_rel_err"]
+        # oracle: replace model classification with true contributions
+        errs = []
+        from repro.core.funnel import allocate
+        from repro.core.clustering import kmeans_select
+
+        for q, a in zip(ctx.test_queries, ctx.test_answers):
+            truth = a.truth()
+            if truth.size == 0:
+                continue
+            contribution = a.contribution()
+            cand = np.flatnonzero(ctx.fb.selectivity(q)[:, 0] > 0)
+            groups = _oracle_groups(contribution, picker.funnel.thresholds, cand)
+            budgets = allocate([g.size for g in groups], b, alpha)
+            feats = ctx.fb.features(q) * picker.cluster_mask[None, :]
+            ids, wts = [], []
+            for g, gb in zip(groups, budgets):
+                if gb <= 0 or g.size == 0:
+                    continue
+                if gb >= g.size:
+                    ids.append(g)
+                    wts.append(np.ones(g.size))
+                else:
+                    loc, w = kmeans_select(feats[g], gb)
+                    ids.append(g[loc])
+                    wts.append(w)
+            est = a.estimate(np.concatenate(ids), np.concatenate(wts))
+            errs.append(error_metrics(truth, est)["avg_rel_err"])
+        oracle[str(alpha)] = float(np.mean(errs))
+        picker.config.alpha = old
+        print(f"[fig10:{dataset}] α={alpha}: learned={learned[str(alpha)]:.3f} "
+              f"oracle={oracle[str(alpha)]:.3f}")
+    out = {"learned": learned, "oracle": oracle}
+    write_result("fig10_alpha", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

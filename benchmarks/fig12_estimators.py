@@ -1,0 +1,42 @@
+"""Fig 12 / Appendix D — biased (median-exemplar) vs unbiased (random
+member) cluster estimators across budgets."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUDGETS, eval_method, get_context, write_result
+from repro.queries.engine import error_metrics
+
+
+def run(datasets=("aria",)):
+    out = {}
+    budgets = BUDGETS[:4]
+    for ds in datasets:
+        ctx = get_context(ds)
+        biased = [eval_method(ctx, "ps3", b)["avg_rel_err"] for b in budgets]
+        unbiased = []
+        for b in budgets:
+            errs = []
+            n = ctx.table.num_partitions
+            bb = max(1, int(b * n))
+            for q, a in zip(ctx.test_queries, ctx.test_answers):
+                truth = a.truth()
+                if truth.size == 0:
+                    continue
+                per_seed = []
+                for s in range(3):  # unbiased: average over draws
+                    sel = ctx.art.picker.pick(q, bb, unbiased=True, seed=s)
+                    per_seed.append(
+                        error_metrics(truth, a.estimate(sel.ids, sel.weights))["avg_rel_err"]
+                    )
+                errs.append(np.mean(per_seed))
+            unbiased.append(float(np.mean(errs)))
+        out[ds] = {"biased": biased, "unbiased": unbiased}
+        print(f"[fig12:{ds}] biased=" + ",".join(f"{e:.3f}" for e in biased)
+              + " unbiased=" + ",".join(f"{e:.3f}" for e in unbiased))
+    write_result("fig12_estimators", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

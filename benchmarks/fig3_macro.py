@@ -1,0 +1,47 @@
+"""Fig 3 — macro-benchmark: error vs sampling budget, 4 datasets × 4 methods
+× 3 metrics, plus the headline data-read-reduction at matched error."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    BUDGETS,
+    DATASETS,
+    data_read_reduction,
+    eval_method,
+    get_context,
+    write_result,
+)
+
+METHODS = ("random", "filter", "lss", "ps3")
+
+
+def run(datasets=DATASETS):
+    out = {}
+    for ds in datasets:
+        ctx = get_context(ds)
+        rows = {}
+        for m in METHODS:
+            rows[m] = {
+                str(b): eval_method(ctx, m, b) for b in BUDGETS
+            }
+        curves = {m: [rows[m][str(b)]["avg_rel_err"] for b in BUDGETS] for m in METHODS}
+        # headline: reduction vs uniform at PS³'s 10%-budget error level
+        target = curves["ps3"][list(BUDGETS).index(0.1)]
+        red_rand = data_read_reduction(BUDGETS, curves["random"], curves["ps3"], target)
+        red_lss = data_read_reduction(BUDGETS, curves["lss"], curves["ps3"], target)
+        out[ds] = {
+            "metrics": rows,
+            "reduction_vs_random": red_rand,
+            "reduction_vs_lss": red_lss,
+        }
+        print(f"[fig3:{ds}] ps3@10% err={target:.3f} "
+              f"reduction vs random={red_rand:.1f}x vs lss={red_lss:.1f}x")
+        for m in METHODS:
+            print(f"   {m:7s} " + " ".join(f"{e:.3f}" for e in curves[m]))
+    write_result("fig3_macro", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

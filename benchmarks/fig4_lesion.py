@@ -1,0 +1,41 @@
+"""Fig 4 — lesion study + factor analysis (each picker component matters)."""
+from __future__ import annotations
+
+from benchmarks.common import eval_method, get_context, write_result
+
+BUDGET = 0.1
+
+LESIONS = {
+    "full": {},
+    "-cluster": {"use_clustering": False},
+    "-outlier": {"use_outliers": False},
+    "-regressor": {"use_funnel": False},
+}
+FACTORS = {
+    "random": ("random", {}),
+    "+filter": ("filter", {}),
+    "+outlier": ("ps3", {"use_funnel": False, "use_clustering": False}),
+    "+regressor": ("ps3", {"use_clustering": False, "use_outliers": False}),
+    "+cluster": ("ps3", {"use_funnel": False, "use_outliers": False}),
+}
+
+
+def run(dataset="aria"):
+    ctx = get_context(dataset)
+    lesion = {
+        name: eval_method(ctx, "ps3", BUDGET, **kw)["avg_rel_err"]
+        for name, kw in LESIONS.items()
+    }
+    factor = {
+        name: eval_method(ctx, meth, BUDGET, **kw)["avg_rel_err"]
+        for name, (meth, kw) in FACTORS.items()
+    }
+    print(f"[fig4:{dataset}] lesion: " + " ".join(f"{k}={v:.3f}" for k, v in lesion.items()))
+    print(f"[fig4:{dataset}] factor: " + " ".join(f"{k}={v:.3f}" for k, v in factor.items()))
+    out = {"lesion": lesion, "factor": factor}
+    write_result("fig4_lesion", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

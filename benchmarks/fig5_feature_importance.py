@@ -1,0 +1,49 @@
+"""Fig 5 — regressor feature importance (gain) by sketch family."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DATASETS, get_context, write_result
+from repro.core.features import SELECTIVITY_NAMES
+from repro.core.gbdt import importance_gain
+from repro.core.sketches import DV_STAT_NAMES, HH_STAT_NAMES, MEASURE_NAMES
+
+
+def _family(kind: str) -> str:
+    if kind in SELECTIVITY_NAMES:
+        return "selectivity"
+    if kind in MEASURE_NAMES:
+        return "measures"
+    if kind in HH_STAT_NAMES or kind == "bitmap":
+        return "heavy_hitter"
+    if kind in DV_STAT_NAMES or kind == "ndv":
+        return "distinct_value"
+    return "other"
+
+
+def run(datasets=DATASETS):
+    out = {}
+    for ds in datasets:
+        ctx = get_context(ds)
+        kinds = np.asarray(ctx.fb.schema.kinds)
+        X = np.concatenate(ctx.art.features, axis=0)
+        gains = np.zeros(X.shape[1])
+        for i, forest in enumerate(ctx.art.picker.funnel.forests):
+            thr = ctx.art.picker.funnel.thresholds[i]
+            y = np.concatenate(
+                [np.where(c > thr, np.sqrt(len(c) / max((c > thr).sum(), 1)), 0.0)
+                 for c in ctx.art.contributions]
+            )
+            gains += importance_gain(forest, X, y)
+        fam = {}
+        for k, g in zip(kinds, gains):
+            fam[_family(k)] = fam.get(_family(k), 0.0) + float(g)
+        total = sum(fam.values()) or 1.0
+        out[ds] = {k: v / total for k, v in fam.items()}
+        print(f"[fig5:{ds}] " + " ".join(f"{k}={v:.1%}" for k, v in sorted(out[ds].items())))
+    write_result("fig5_feature_importance", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig 6 — layout sensitivity: PS³ vs baselines across sort orders."""
+from __future__ import annotations
+
+from benchmarks.common import BUDGETS, error_curve, get_context, write_result
+
+LAYOUTS = {
+    "tpcds": ("sorted", "sorted:cs_net_profit"),
+    "aria": ("sorted", "sorted:AppInfo_Version"),
+}
+
+
+def run():
+    out = {}
+    for ds, layouts in LAYOUTS.items():
+        out[ds] = {}
+        for layout in layouts:
+            ctx = get_context(ds, layout=layout)
+            curves = {m: error_curve(ctx, m) for m in ("random", "lss", "ps3")}
+            out[ds][layout] = curves
+            print(f"[fig6:{ds}:{layout}] " + " | ".join(
+                f"{m} " + ",".join(f"{e:.2f}" for e in c) for m, c in curves.items()))
+    write_result("fig6_layouts", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig 7 — error breakdown by query selectivity (tpch)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import eval_method, get_context, write_result
+from repro.core.baselines import uniform_filter_select, uniform_select
+from repro.queries.engine import error_metrics, predicate_mask
+
+BUCKETS = ((0.0, 0.2), (0.2, 0.8), (0.8, 1.01))
+
+
+def run(dataset="tpch", budget=0.1):
+    ctx = get_context(dataset)
+    n = ctx.table.num_partitions
+    b = max(1, int(budget * n))
+    rows = {f"{lo}-{hi}": {"random": [], "filter": [], "ps3": [], "n": 0}
+            for lo, hi in BUCKETS}
+    rng = np.random.default_rng(0)
+    for q, a in zip(ctx.test_queries, ctx.test_answers):
+        truth = a.truth()
+        if truth.size == 0:
+            continue
+        sel_frac = predicate_mask(ctx.table, q.predicate).mean()
+        for (lo, hi) in BUCKETS:
+            if lo <= sel_frac < hi:
+                key = f"{lo}-{hi}"
+                break
+        ids, w = uniform_select(n, b, rng)
+        rows[key]["random"].append(error_metrics(truth, a.estimate(ids, w))["avg_rel_err"])
+        cand = np.flatnonzero(ctx.fb.selectivity(q)[:, 0] > 0)
+        ids, w = uniform_filter_select(cand, b, rng)
+        rows[key]["filter"].append(error_metrics(truth, a.estimate(ids, w))["avg_rel_err"])
+        s = ctx.art.picker.pick(q, b)
+        rows[key]["ps3"].append(error_metrics(truth, a.estimate(s.ids, s.weights))["avg_rel_err"])
+        rows[key]["n"] += 1
+    out = {
+        k: {m: (float(np.mean(v[m])) if v[m] else None) for m in ("random", "filter", "ps3")}
+        | {"n": v["n"]}
+        for k, v in rows.items()
+    }
+    for k, v in out.items():
+        print(f"[fig7:{dataset}] sel {k} (n={v['n']}): " + " ".join(
+            f"{m}={v[m]:.3f}" if v[m] is not None else f"{m}=—"
+            for m in ("random", "filter", "ps3")))
+    write_result("fig7_selectivity", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

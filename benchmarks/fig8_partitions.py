@@ -1,0 +1,33 @@
+"""Fig 8 — partition-count sensitivity + the random-layout special case."""
+from __future__ import annotations
+
+from benchmarks.common import BUDGETS, QUICK, error_curve, get_context, write_result
+
+
+def run(dataset="tpch"):
+    out = {}
+    grids = ((64, 2048), (256, 512)) if QUICK else ((64, 8192), (256, 2048), (1024, 512))
+    for n_parts, rows in grids:
+        ctx = get_context(dataset, n_parts=n_parts, rows=rows)
+        out[f"p{n_parts}"] = {
+            "random": error_curve(ctx, "random"),
+            "ps3": error_curve(ctx, "ps3"),
+        }
+        print(f"[fig8:{dataset}:p{n_parts}] random="
+              + ",".join(f"{e:.2f}" for e in out[f'p{n_parts}']['random'])
+              + " ps3=" + ",".join(f"{e:.2f}" for e in out[f'p{n_parts}']['ps3']))
+    # random layout: uniform sampling is optimal; PS³ should be ≈ equal
+    ctx = get_context(dataset, layout="random")
+    out["random_layout"] = {
+        "random": error_curve(ctx, "random"),
+        "ps3": error_curve(ctx, "ps3"),
+    }
+    print(f"[fig8:{dataset}:random-layout] random="
+          + ",".join(f"{e:.2f}" for e in out['random_layout']['random'])
+          + " ps3=" + ",".join(f"{e:.2f}" for e in out['random_layout']['ps3']))
+    write_result("fig8_partitions", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Fig 9/11 — generalization to unseen structured (TPC-H-style) templates.
+
+The picker is trained on the random workload; the test set is drawn from
+fixed query TEMPLATES with random constants (Q1/Q5/Q6-like shapes on the
+tpch-like schema) — a larger train/test domain gap than Fig 3.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUDGETS, get_context, write_result
+from repro.core.baselines import uniform_select
+from repro.queries.engine import error_metrics, per_partition_answers
+from repro.queries.ir import Aggregate, Clause, Predicate, Query
+
+
+def templates(rng) -> dict[str, Query]:
+    d = float(rng.integers(2000, 2500))
+    disc = float(rng.choice([0.04, 0.05, 0.06]))
+    qty = float(rng.integers(20, 30))
+    return {
+        # Q1-like: pricing summary past a date, grouped by flags
+        "q1": Query(
+            (Aggregate("sum", ((1.0, "l_quantity"),)),
+             Aggregate("sum", ((1.0, "l_extendedprice"),)),
+             Aggregate("avg", ((1.0, "l_discount"),)),
+             Aggregate("count")),
+            Predicate.conjunction([Clause("l_shipdate", "<=", d)]),
+            ("l_returnflag", "l_linestatus"),
+        ),
+        # Q5-like: revenue by nation in a date window
+        "q5": Query(
+            (Aggregate("sum", ((1.0, "l_extendedprice"),)),),
+            Predicate.conjunction([
+                Clause("l_shipdate", ">=", d - 365),
+                Clause("l_shipdate", "<", d),
+            ]),
+            ("n1_name",),
+        ),
+        # Q6-like: forecast revenue change (selective conjunction)
+        "q6": Query(
+            (Aggregate("sum", ((1.0, "l_extendedprice"),)), Aggregate("count")),
+            Predicate.conjunction([
+                Clause("l_shipdate", ">=", d - 365),
+                Clause("l_shipdate", "<", d),
+                Clause("l_discount", ">=", disc - 0.011),
+                Clause("l_discount", "<=", disc + 0.011),
+                Clause("l_quantity", "<", qty),
+            ]),
+            (),
+        ),
+        # Q12-like: shipmode counts
+        "q12": Query(
+            (Aggregate("count"),),
+            Predicate.conjunction([
+                Clause("l_shipdate", ">=", d - 365),
+                Clause("l_shipdate", "<", d),
+                Clause("l_shipmode", "in", (0, 2)),
+            ]),
+            ("l_shipmode",),
+        ),
+    }
+
+
+def run(dataset="tpch", budget=0.1, n_instances=5):
+    ctx = get_context(dataset)
+    n = ctx.table.num_partitions
+    b = max(1, int(budget * n))
+    out = {}
+    for name in ("q1", "q5", "q6", "q12"):
+        ps3_errs, rnd_errs = [], []
+        for i in range(n_instances):
+            q = templates(np.random.default_rng(100 + i))[name]
+            a = per_partition_answers(ctx.table, q)
+            truth = a.truth()
+            if truth.size == 0:
+                continue
+            s = ctx.art.picker.pick(q, b)
+            ps3_errs.append(error_metrics(truth, a.estimate(s.ids, s.weights))["avg_rel_err"])
+            ids, w = uniform_select(n, b, np.random.default_rng(i))
+            rnd_errs.append(error_metrics(truth, a.estimate(ids, w))["avg_rel_err"])
+        out[name] = {
+            "ps3_mean": float(np.mean(ps3_errs)), "ps3_worst": float(np.max(ps3_errs)),
+            "ps3_best": float(np.min(ps3_errs)), "random_mean": float(np.mean(rnd_errs)),
+        }
+        print(f"[fig9:{name}] ps3 mean={out[name]['ps3_mean']:.3f} "
+              f"(best {out[name]['ps3_best']:.3f} worst {out[name]['ps3_worst']:.3f}) "
+              f"random={out[name]['random_mean']:.3f}")
+    write_result("fig9_generalization", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Benchmark aggregator: one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table4] [--quick]
+
+Results land in results/bench/*.json; a summary prints per module.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table4_storage",
+    "table_kernels",
+    "fig3_macro",
+    "fig4_lesion",
+    "fig5_feature_importance",
+    "table5_picker_latency",
+    "table3_speedup",
+    "fig7_selectivity",
+    "fig9_generalization",
+    "fig10_alpha",
+    "fig12_estimators",
+    "table6_clustering",
+    "fig6_layouts",
+    "fig8_partitions",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--full", action="store_true", help="paper-scale grid")
+    args = ap.parse_args()
+    if args.full:
+        os.environ["BENCH_FULL"] = "1"
+    todo = [m for m in MODULES if not args.only or m in args.only.split(",")]
+    failures = []
+    t_all = time.time()
+    for name in todo:
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.time()
+        try:
+            import jax
+
+            jax.clear_caches()  # bound the jit cache across modules
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"--- {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    print(f"\n{len(todo) - len(failures)}/{len(todo)} benchmarks OK "
+          f"in {time.time() - t_all:.0f}s")
+    if failures:
+        print("FAILED:", ", ".join(failures))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table 3 — compute-time reduction from reading fewer partitions.
+
+The paper measures SCOPE cluster time; our executor is the JAX engine, so
+we time exact evaluation over all partitions vs the PS³-selected subset at
+1/5/10% budgets (same group-aggregate kernel path) — data read is the
+proxy the paper validates, and wall time here tracks it near-linearly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, get_context, write_result
+from repro.queries.engine import per_partition_answers
+
+
+def _eval_subset(table, query, ids):
+    sub = type(table)(
+        table.schema,
+        {k: v[np.asarray(ids)] for k, v in table.columns.items()},
+        name=table.name,
+    )
+    return per_partition_answers(sub, query)
+
+
+def run(dataset="tpch", budgets=(0.01, 0.05, 0.1)):
+    ctx = get_context(dataset)
+    n = ctx.table.num_partitions
+    out = {}
+    # warm + time exact evaluation
+    with Timer() as t_full:
+        for q in ctx.test_queries[:6]:
+            per_partition_answers(ctx.table, q)
+    for b in budgets:
+        budget = max(1, int(b * n))
+        with Timer() as t_sub:
+            for q in ctx.test_queries[:6]:
+                sel = ctx.art.picker.pick(q, budget)
+                _eval_subset(ctx.table, q, sel.ids)
+        out[str(b)] = {
+            "speedup_compute": t_full.seconds / max(t_sub.seconds, 1e-9),
+            "full_s": t_full.seconds,
+            "subset_s": t_sub.seconds,
+        }
+        print(f"[table3:{dataset}] budget={b:.0%} compute speedup="
+              f"{out[str(b)]['speedup_compute']:.1f}x")
+    write_result("table3_speedup", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

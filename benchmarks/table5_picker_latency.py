@@ -1,0 +1,33 @@
+"""Table 5 — partition-picker latency (total + clustering share)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DATASETS, get_context, write_result
+
+
+def run(datasets=DATASETS, budgets=(0.05, 0.1, 0.2)):
+    out = {}
+    for ds in datasets:
+        ctx = get_context(ds)
+        totals, clusters = [], []
+        n = ctx.table.num_partitions
+        for q in ctx.test_queries[:8]:
+            for b in budgets:
+                sel = ctx.art.picker.pick(q, max(1, int(b * n)))
+                totals.append(sel.picker_ms)
+                clusters.append(sel.clustering_ms)
+        out[ds] = {
+            "total_ms_mean": float(np.mean(totals)),
+            "total_ms_std": float(np.std(totals)),
+            "clustering_ms_mean": float(np.mean(clusters)),
+        }
+        print(f"[table5:{ds}] total={out[ds]['total_ms_mean']:.1f}±"
+              f"{out[ds]['total_ms_std']:.1f}ms "
+              f"clustering={out[ds]['clustering_ms_mean']:.1f}ms")
+    write_result("table5_picker_latency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Table 6/7 — clustering algorithm + feature-selection ablation (AUC).
+
+Area under the (budget → avg-rel-err) curve for clustering-only selection:
+HAC(single) vs HAC(ward) vs KMeans, each ± Algorithm-3 feature selection.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_context, write_result
+from repro.core.clustering import hac_select, kmeans_select
+from repro.queries.engine import error_metrics
+
+BUDGETS = (0.05, 0.1, 0.2)
+
+
+def _auc(ctx, select_fn, mask):
+    errs = []
+    for q, a in zip(ctx.test_queries[:8], ctx.test_answers[:8]):
+        truth = a.truth()
+        if truth.size == 0:
+            continue
+        feats = ctx.fb.features(q) * mask[None, :]
+        per_budget = []
+        for bfrac in BUDGETS:
+            b = max(1, int(bfrac * ctx.table.num_partitions))
+            ids, w = select_fn(feats, b)
+            per_budget.append(error_metrics(truth, a.estimate(ids, w))["avg_rel_err"])
+        errs.append(np.trapezoid(per_budget, BUDGETS))
+    return float(np.mean(errs))
+
+
+def run(datasets=("aria", "kdd")):
+    out = {}
+    for ds in datasets:
+        ctx = get_context(ds)
+        nomask = np.ones(ctx.fb.schema.dim)
+        fsmask = ctx.art.picker.cluster_mask
+        algos = {
+            "hac_single": lambda f, b: hac_select(f, b, "single"),
+            "hac_ward": lambda f, b: hac_select(f, b, "ward"),
+            "kmeans": kmeans_select,
+        }
+        out[ds] = {}
+        for name, fn in algos.items():
+            out[ds][name] = _auc(ctx, fn, nomask)
+            out[ds][name + "+featsel"] = _auc(ctx, fn, fsmask)
+        print(f"[table6:{ds}] " + " ".join(f"{k}={v:.3f}" for k, v in out[ds].items()))
+    write_result("table6_clustering", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Kernel-layer roofline characteristics (framework table, not in paper).
+
+For each Pallas kernel: bytes moved / FLOPs at a representative ingest
+shape, the implied TPU-v5e roofline time (memory vs compute bound), and a
+CPU-interpret correctness spot-check vs the jnp reference.  Wall-clock on
+this CPU container is *not* the metric (interpret mode is a correctness
+harness); the roofline numbers are the deliverable.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import write_result
+from repro.kernels import ops, ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+P, R = 64, 65536  # 64 partitions × 64Ki rows per ingest batch
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.abs(rng.normal(size=(P, R))) + 0.1, jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 128, size=(P, R)), jnp.int32)
+    edges = jnp.asarray(np.quantile(np.asarray(x), np.linspace(0, 1, 11), axis=1).T,
+                        jnp.float32)
+    feats = jnp.asarray(rng.normal(size=(2048, 256)), jnp.float32)
+    centers = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+
+    rows = {}
+
+    def record(name, bytes_moved, flops, check):
+        t_mem = bytes_moved / HBM_BW
+        t_cmp = flops / PEAK_FLOPS_BF16
+        rows[name] = {
+            "bytes": bytes_moved,
+            "flops": flops,
+            "t_mem_us": t_mem * 1e6,
+            "t_compute_us": t_cmp * 1e6,
+            "bound": "memory" if t_mem >= t_cmp else "compute",
+            "max_abs_err": float(check),
+        }
+        print(f"[kernels:{name}] {bytes_moved/1e6:.1f}MB {flops/1e6:.1f}MF "
+              f"→ {max(t_mem, t_cmp)*1e6:.1f}us ({rows[name]['bound']}-bound) "
+              f"err={check:.2e}")
+
+    got, want = ops.moments_op(x), ref.moments_ref(x)
+    record("moments", x.size * 4, x.size * 8,
+           np.max(np.abs((np.asarray(got) - np.asarray(want)) / (np.abs(want) + 1))))
+
+    got, want = ops.histogram_range_op(x, edges), ref.histogram_range_ref(x, edges)
+    record("histogram", x.size * 4, x.size * 10 * 2,
+           np.max(np.abs(np.asarray(got) - np.asarray(want))))
+
+    got, want = ops.bincount_op(codes, 128), ref.bincount_ref(codes, 128)
+    record("bincount", codes.size * 4, codes.size * 128 * 2,
+           np.max(np.abs(np.asarray(got) - np.asarray(want))))
+
+    got, want = ops.pdist_sq_op(feats, centers), ref.pdist_sq_ref(feats, centers)
+    flops = 2 * feats.shape[0] * centers.shape[0] * feats.shape[1]
+    record("pdist", (feats.size + centers.size + feats.shape[0] * centers.shape[0]) * 4,
+           flops, np.max(np.abs(np.asarray(got) - np.asarray(want))) / 1e3)
+
+    vals = jnp.asarray(rng.normal(size=(8, 4, 8192)), jnp.float32)
+    mask = jnp.asarray(rng.random((8, 8192)) < 0.5)
+    gcodes = jnp.asarray(rng.integers(0, 256, size=(8, 8192)), jnp.int32)
+    got = ops.group_aggregate_op(vals, mask, gcodes, 256)
+    want = ref.group_aggregate_ref(vals, mask, gcodes, 256)
+    record("groupagg", vals.size * 4, vals.size * 256 * 2,
+           np.max(np.abs(np.asarray(got) - np.asarray(want))))
+
+    write_result("table_kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

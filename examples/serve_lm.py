@@ -1,0 +1,12 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    serve_main([
+        "--arch", "mixtral-8x22b", "--smoke",
+        "--batch", "4", "--prompt-len", "32", "--gen", "16",
+    ])

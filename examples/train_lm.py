@@ -1,0 +1,14 @@
+"""Train a small LM with the PS³ data plane (weighted shard selection),
+checkpointing and straggler handling — the framework's training loop on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    train_main([
+        "--arch", "qwen1.5-0.5b", "--smoke",
+        "--steps", "60", "--batch", "8", "--ckpt-every", "20",
+        "--ckpt-dir", "/tmp/repro_quickstart_ckpt",
+    ])

@@ -1,0 +1,33 @@
+"""Yi-6B [arXiv:2403.04652; hf] — llama-arch GQA.
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-6b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=4,
+        d_ff=11008,
+        vocab=64000,
+        block_pattern=("attn",),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="yi6b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=96,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=192,
+        vocab=256,
+        block_pattern=("attn",),
+    )

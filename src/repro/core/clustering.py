@@ -1,0 +1,216 @@
+"""Clustering-based sample selection (paper §4.2) — JAX KMeans + numpy HAC.
+
+KMeans runs in JAX (jit, static cluster count): assignment distances are the
+x² − 2x·cᵀ + c² expansion, i.e. a matmul — on TPU this is the `pdist`
+Pallas kernel's MXU pattern, here expressed so XLA fuses it the same way.
+Initialization is deterministic greedy farthest-point (k-means++ without
+the randomness — the picker must be reproducible per query, Appendix D's
+"deterministic answer" argument).
+
+Exemplar selection follows the paper exactly: the member whose feature
+vector is nearest the *median* feature vector of its cluster; weight =
+cluster size.  The unbiased variant (random member, Appendix D) is kept for
+the Fig-12 benchmark.
+
+HAC (single / ward linkage) is provided in numpy for the Table 6
+reproduction (Lance–Williams update, vectorized).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BIG = 1e30
+
+
+# --------------------------------------------------------------------------
+# KMeans (JAX)
+# --------------------------------------------------------------------------
+def _pairwise_sq(a: jax.Array, b: jax.Array) -> jax.Array:
+    """||a_i - b_j||² via the matmul expansion (MXU-friendly)."""
+    aa = jnp.sum(a * a, axis=1)[:, None]
+    bb = jnp.sum(b * b, axis=1)[None, :]
+    return jnp.maximum(aa + bb - 2.0 * (a @ b.T), 0.0)
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_fit(
+    x: jax.Array, k: int, iters: int = 25, seed: int = 0
+) -> tuple[jax.Array, jax.Array]:
+    """k-means++ init (fixed key ⇒ deterministic per query) + Lloyd.
+
+    Empty clusters are relocated to the point currently farthest from its
+    center (sklearn-style), which prevents the giant-cluster/outlier-seed
+    failure mode that inflates exemplar weights.
+    """
+    n = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+
+    # --- k-means++ seeding (D² sampling)
+    def seed_step(carry, kk):
+        mind, centers, i = carry
+        p = mind / jnp.maximum(mind.sum(), 1e-30)
+        nxt = jax.random.choice(kk, n, p=p)
+        c = x[nxt]
+        mind = jnp.minimum(mind, jnp.sum((x - c) ** 2, axis=1))
+        centers = centers.at[i].set(c)
+        return (mind, centers, i + 1), None
+
+    first = jax.random.randint(key, (), 0, n)
+    centers0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+    mind0 = jnp.sum((x - x[first]) ** 2, axis=1)
+    keys = jax.random.split(jax.random.fold_in(key, 1), max(k - 1, 1))
+    (mind, centers, _), _ = jax.lax.scan(
+        seed_step, (mind0, centers0, 1), keys[: max(k - 1, 0)]
+    )
+    if k == 1:
+        centers = centers0
+
+    def lloyd(_, centers):
+        d = _pairwise_sq(x, centers)  # (n, k)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (n, k)
+        counts = onehot.sum(axis=0)  # (k,)
+        sums = onehot.T @ x  # (k, f)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # relocate empty clusters to the worst-fit points (one per cluster,
+        # ranked by current distance-to-assigned-center)
+        dmin = jnp.min(d, axis=1)
+        order = jnp.argsort(-dmin)  # farthest points first
+        empty_rank = jnp.cumsum(counts == 0) - 1  # rank among empties
+        reloc = x[order[jnp.clip(empty_rank, 0, n - 1)]]
+        return jnp.where((counts > 0)[:, None], new, reloc)
+
+    centers = jax.lax.fori_loop(0, iters, lloyd, centers)
+    assign = jnp.argmin(_pairwise_sq(x, centers), axis=1)
+    return centers, assign
+
+
+@partial(jax.jit, static_argnames=("k",))
+def cluster_medians(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Per-cluster per-feature median via masked sort (static shapes)."""
+    n, f = x.shape
+
+    def med(c):
+        m = assign == c
+        cnt = m.sum()
+        big = jnp.where(m[:, None], x, _BIG)  # non-members sort to the end
+        s = jnp.sort(big, axis=0)
+        lo = jnp.maximum((cnt - 1) // 2, 0)
+        hi = jnp.maximum(cnt // 2, 0)
+        return 0.5 * (s[lo] + s[hi])
+
+    return jax.vmap(med)(jnp.arange(k))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def select_exemplars(x: jax.Array, assign: jax.Array, k: int):
+    """Paper §4.2: exemplar = member nearest the cluster median.
+
+    Returns (exemplar_ids (k,), weights (k,), valid (k,)) — `valid` is False
+    for empty clusters (possible when k > #distinct points).
+    """
+    medians = cluster_medians(x, assign, k)
+    d = _pairwise_sq(x, medians)  # (n, k)
+    member = assign[:, None] == jnp.arange(k)[None, :]
+    d = jnp.where(member, d, _BIG)
+    ex = jnp.argmin(d, axis=0)  # (k,)
+    counts = member.sum(axis=0)
+    return ex, counts.astype(jnp.float32), counts > 0
+
+
+def kmeans_select(
+    features: np.ndarray, budget: int, iters: int = 25
+) -> tuple[np.ndarray, np.ndarray]:
+    """End-to-end §4.2 selection: (partition_ids, weights) under `budget`."""
+    n = features.shape[0]
+    if budget >= n:
+        return np.arange(n), np.ones(n)
+    x = jnp.asarray(features, jnp.float32)
+    _, assign = kmeans_fit(x, int(budget), iters)
+    ex, wts, valid = select_exemplars(x, assign, int(budget))
+    ex, wts, valid = np.asarray(ex), np.asarray(wts), np.asarray(valid)
+    return ex[valid], wts[valid]
+
+
+def kmeans_select_unbiased(
+    features: np.ndarray, budget: int, seed: int = 0, iters: int = 25
+) -> tuple[np.ndarray, np.ndarray]:
+    """Appendix D unbiased variant: exemplar drawn uniformly in the cluster."""
+    n = features.shape[0]
+    if budget >= n:
+        return np.arange(n), np.ones(n)
+    x = jnp.asarray(features, jnp.float32)
+    _, assign = kmeans_fit(x, int(budget), iters)
+    assign = np.asarray(assign)
+    rng = np.random.default_rng(seed)
+    ids, wts = [], []
+    for c in range(int(budget)):
+        members = np.flatnonzero(assign == c)
+        if members.size == 0:
+            continue
+        ids.append(int(rng.choice(members)))
+        wts.append(float(members.size))
+    return np.asarray(ids, np.int64), np.asarray(wts)
+
+
+# --------------------------------------------------------------------------
+# Hierarchical agglomerative clustering (numpy; Table 6 repro)
+# --------------------------------------------------------------------------
+def hac_fit(x: np.ndarray, k: int, linkage: str = "ward") -> np.ndarray:
+    """Lance–Williams HAC; returns cluster assignment (n,) with k clusters."""
+    n = x.shape[0]
+    if k >= n:
+        return np.arange(n)
+    d = np.sqrt(np.maximum(_pairwise_sq_np(x), 0.0))
+    if linkage == "ward":
+        d = d**2  # ward works on squared distances
+    np.fill_diagonal(d, np.inf)
+    size = np.ones(n)
+    active = np.ones(n, bool)
+    parent = np.arange(n)
+    for _ in range(n - k):
+        flat = np.argmin(d)
+        i, j = divmod(flat, n)
+        if i > j:
+            i, j = j, i
+        # merge j into i (Lance–Williams)
+        if linkage == "single":
+            new = np.minimum(d[i], d[j])
+        elif linkage == "ward":
+            si, sj, sk = size[i], size[j], size
+            new = ((si + sk) * d[i] + (sj + sk) * d[j] - sk * d[i, j]) / (si + sj + sk)
+        else:
+            raise ValueError(linkage)
+        d[i, :] = new
+        d[:, i] = new
+        d[i, i] = np.inf
+        d[j, :] = np.inf
+        d[:, j] = np.inf
+        size[i] += size[j]
+        active[j] = False
+        parent[parent == j] = i
+    # relabel to 0..k-1
+    labels = {p: idx for idx, p in enumerate(np.flatnonzero(active))}
+    return np.asarray([labels[p] for p in parent])
+
+
+def hac_select(
+    features: np.ndarray, budget: int, linkage: str = "ward"
+) -> tuple[np.ndarray, np.ndarray]:
+    n = features.shape[0]
+    if budget >= n:
+        return np.arange(n), np.ones(n)
+    assign = hac_fit(features, int(budget), linkage)
+    x = jnp.asarray(features, jnp.float32)
+    ex, wts, valid = select_exemplars(x, jnp.asarray(assign), int(budget))
+    ex, wts, valid = np.asarray(ex), np.asarray(wts), np.asarray(valid)
+    return ex[valid], wts[valid]
+
+
+def _pairwise_sq_np(x: np.ndarray) -> np.ndarray:
+    aa = (x * x).sum(axis=1)
+    return aa[:, None] + aa[None, :] - 2.0 * (x @ x.T)

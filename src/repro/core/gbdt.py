@@ -1,0 +1,303 @@
+"""Histogram-based gradient-boosted decision trees (the paper's XGBoost).
+
+The paper trains k=4 XGBoost regressors per workload (§4.3, Appendix B.2).
+XGBoost is not available in this environment — and more importantly the
+*prediction* path runs inside the query optimizer, which in our framework is
+JAX — so we implement an XGBoost-class histogram GBDT ourselves:
+
+  * **Fit** (offline, host): features are quantile-binned to uint8 codes
+    (256 bins).  Trees are grown level-wise to a fixed depth; split search
+    computes per-(node, feature, bin) gradient histograms with one
+    vectorized `np.add.at` pass per feature and picks the split maximizing
+    the usual second-order gain  GL²/(HL+λ) + GR²/(HR+λ) − G²/(H+λ).
+    Squared-error loss (g = pred − y, h = 1), matching Appendix B.2.
+  * **Predict** (query time, JAX): the forest is exported as dense arrays
+    (feature id / bin threshold per internal node, values per leaf) and
+    traversed with a `lax.fori_loop` over depth — fully jittable, so the
+    whole funnel (Algorithm 2) can execute on an accelerator.
+
+Fixed-depth complete trees keep both paths branch-free; unused subtrees are
+padded (gain −inf splits are frozen into "always left" with value-copying
+leaves), which costs a few wasted nodes but keeps the TPU path regular —
+the same adaptation argument as the rest of DESIGN §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NUM_BINS = 256  # uint8 codes
+
+
+# --------------------------------------------------------------------------
+# quantile binning
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Binner:
+    """Per-feature quantile bin edges; code = #edges strictly below value."""
+
+    edges: np.ndarray  # (n_features, NUM_BINS - 1)
+
+    @staticmethod
+    def fit(x: np.ndarray, num_bins: int = NUM_BINS) -> "Binner":
+        qs = np.linspace(0.0, 1.0, num_bins + 1)[1:-1]
+        edges = np.quantile(x, qs, axis=0).T  # (F, B-1)
+        return Binner(np.ascontiguousarray(edges))
+
+    def transform(self, x: np.ndarray) -> np.ndarray:
+        out = np.empty(x.shape, np.uint8)
+        for f in range(x.shape[1]):
+            out[:, f] = np.searchsorted(self.edges[f], x[:, f], side="right")
+        return out
+
+    def transform_jnp(self, x: jax.Array) -> jax.Array:
+        edges = jnp.asarray(self.edges)  # (F, B-1)
+        return jax.vmap(
+            lambda col, e: jnp.searchsorted(e, col, side="right"), in_axes=(1, 0), out_axes=1
+        )(x, edges).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# forest container (dense, JAX-friendly)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Forest:
+    """Complete binary trees of fixed depth.
+
+    feat[t, i] / thr[t, i]: internal node i of tree t splits on
+    ``code[feat] <= thr`` (left) vs ``>`` (right).  leaf[t, j] are leaf
+    values in level order.  Prediction = base + lr * Σ_t leaf_t(x).
+    """
+
+    depth: int
+    learning_rate: float
+    base: float
+    feat: np.ndarray  # (T, 2**depth - 1) int32
+    thr: np.ndarray  # (T, 2**depth - 1) int32 (bin code threshold)
+    leaf: np.ndarray  # (T, 2**depth) float32
+    binner: Binner
+
+    @property
+    def num_trees(self) -> int:
+        return self.feat.shape[0]
+
+    # ---- host predict ----------------------------------------------------
+    def predict_codes(self, codes: np.ndarray) -> np.ndarray:
+        n = codes.shape[0]
+        out = np.full(n, self.base, np.float64)
+        for t in range(self.num_trees):
+            idx = np.zeros(n, np.int64)
+            for _ in range(self.depth):
+                f = self.feat[t, idx]
+                go_right = codes[np.arange(n), f] > self.thr[t, idx]
+                idx = 2 * idx + 1 + go_right
+            out += self.learning_rate * self.leaf[t, idx - (2**self.depth - 1)]
+        return out
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return self.predict_codes(self.binner.transform(x))
+
+    # ---- JAX predict -----------------------------------------------------
+    def as_jnp(self):
+        return (
+            jnp.asarray(self.feat),
+            jnp.asarray(self.thr),
+            jnp.asarray(self.leaf),
+            jnp.asarray(self.binner.edges),
+        )
+
+
+@partial(jax.jit, static_argnames=("depth",))
+def forest_predict_jnp(
+    feat: jax.Array,  # (T, I)
+    thr: jax.Array,  # (T, I)
+    leaf: jax.Array,  # (T, L)
+    edges: jax.Array,  # (F, B-1)
+    x: jax.Array,  # (N, F) raw features
+    depth: int,
+    base: float,
+    learning_rate: float,
+) -> jax.Array:
+    codes = jax.vmap(
+        lambda col, e: jnp.searchsorted(e, col, side="right"), in_axes=(1, 0), out_axes=1
+    )(x, edges).astype(jnp.int32)
+
+    def tree(carry, tf):
+        f, t, lv = tf
+
+        def step(_, idx):
+            fsel = f[idx]  # (N,)
+            go_right = jnp.take_along_axis(codes, fsel[:, None], axis=1)[:, 0] > t[idx]
+            return 2 * idx + 1 + go_right.astype(jnp.int32)
+
+        idx = jax.lax.fori_loop(0, depth, step, jnp.zeros(x.shape[0], jnp.int32))
+        return carry + lv[idx - (2**depth - 1)], None
+
+    out, _ = jax.lax.scan(tree, jnp.zeros(x.shape[0], jnp.float32), (feat, thr, leaf))
+    return base + learning_rate * out
+
+
+# --------------------------------------------------------------------------
+# fitting
+# --------------------------------------------------------------------------
+def fit_gbdt(
+    x: np.ndarray,
+    y: np.ndarray,
+    *,
+    num_trees: int = 60,
+    depth: int = 5,
+    learning_rate: float = 0.3,
+    lam: float = 1.0,
+    min_child_weight: float = 4.0,
+    sample_weight: np.ndarray | None = None,
+    binner: Binner | None = None,
+    seed: int = 0,
+    colsample: float = 1.0,
+    rowsample: float = 1.0,
+) -> Forest:
+    """Squared-error histogram GBDT (level-wise, fixed depth)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    n, n_feat = x.shape
+    w = np.ones(n) if sample_weight is None else np.asarray(sample_weight, np.float64)
+    binner = binner or Binner.fit(x)
+    codes = binner.transform(x).astype(np.int64)  # (n, F)
+    rng = np.random.default_rng(seed)
+
+    base = float(np.average(y, weights=w))
+    pred = np.full(n, base)
+    n_internal = 2**depth - 1
+    feats = np.zeros((num_trees, n_internal), np.int32)
+    thrs = np.full((num_trees, n_internal), NUM_BINS, np.int32)  # always-left default
+    leaves = np.zeros((num_trees, 2**depth), np.float32)
+
+    for t in range(num_trees):
+        if rowsample < 1.0:
+            rows = np.sort(
+                rng.choice(n, size=max(32, int(rowsample * n)), replace=False)
+            )
+        else:
+            rows = slice(None)
+        codes_t = codes[rows]
+        nt = codes_t.shape[0]
+        arangen = np.arange(nt)
+        g = (w * (pred - y))[rows]  # dL/dpred for 0.5*(pred-y)^2, weighted
+        h = w[rows].copy()
+        node = np.zeros(nt, np.int64)  # node index within current level
+        node_base = 0  # first node id of current level in the tree arrays
+        feat_subset = (
+            np.sort(rng.choice(n_feat, size=max(1, int(colsample * n_feat)), replace=False))
+            if colsample < 1.0
+            else np.arange(n_feat)
+        )
+        for level in range(depth):
+            n_nodes = 2**level
+            # gradient histograms: (nodes, F, B) — one flattened bincount
+            # per level instead of a per-feature np.add.at loop.
+            fs = feat_subset
+            flat_idx = (
+                (node[:, None] * n_feat + fs[None, :]) * NUM_BINS + codes_t[:, fs]
+            ).reshape(-1)
+            size = n_nodes * n_feat * NUM_BINS
+            G = np.bincount(
+                flat_idx, weights=np.repeat(g, fs.size), minlength=size
+            ).reshape(n_nodes, n_feat, NUM_BINS)
+            H = np.bincount(
+                flat_idx, weights=np.repeat(h, fs.size), minlength=size
+            ).reshape(n_nodes, n_feat, NUM_BINS)
+            GL = G.cumsum(axis=2)
+            HL = H.cumsum(axis=2)
+            Gt = GL[:, :, -1:]
+            Ht = HL[:, :, -1:]
+            GR, HR = Gt - GL, Ht - HL
+            gain = (
+                GL**2 / (HL + lam) + GR**2 / (HR + lam) - Gt**2 / (Ht + lam)
+            )
+            ok = (HL >= min_child_weight) & (HR >= min_child_weight)
+            gain = np.where(ok, gain, -np.inf)
+            # exclude the last bin (right side empty by construction)
+            gain[:, :, -1] = -np.inf
+            flat = gain.reshape(n_nodes, -1)
+            best = flat.argmax(axis=1)
+            best_gain = flat[np.arange(n_nodes), best]
+            bf = (best // NUM_BINS).astype(np.int32)
+            bb = (best % NUM_BINS).astype(np.int32)
+            # nodes with no valid split: freeze to always-left (thr = NUM_BINS)
+            dead = ~np.isfinite(best_gain)
+            bf[dead] = 0
+            bb_store = np.where(dead, NUM_BINS, bb).astype(np.int32)
+            ids = node_base + np.arange(n_nodes)
+            feats[t, ids] = bf
+            thrs[t, ids] = bb_store
+            go_right = codes_t[arangen, bf[node]] > bb_store[node]
+            node = 2 * node + go_right
+            node_base += n_nodes
+        # leaf values (from the subsample)
+        Gs = np.zeros(2**depth)
+        Hs = np.zeros(2**depth)
+        np.add.at(Gs, node, g)
+        np.add.at(Hs, node, h)
+        lv = -Gs / (Hs + lam)
+        leaves[t] = lv.astype(np.float32)
+        # route ALL rows for the prediction update
+        if rowsample < 1.0:
+            full = np.zeros(n, np.int64)
+            base_id = 0
+            for level in range(depth):
+                ids = base_id + np.arange(2**level)
+                gr = codes[np.arange(n), feats[t, ids][full]] > thrs[t, ids][full]
+                full = 2 * full + gr
+                base_id += 2**level
+            pred += learning_rate * lv[full]
+        else:
+            pred += learning_rate * lv[node]
+
+    return Forest(depth, learning_rate, base, feats, thrs, leaves, binner)
+
+
+def importance_gain(forest: Forest, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Per-feature total gain (paper Fig 5 'gain' metric, recomputed).
+
+    We re-derive gain on the training data by walking each tree and
+    accumulating the achieved impurity reduction at every internal node,
+    attributed to the node's split feature.
+    """
+    codes = forest.binner.transform(np.asarray(x, np.float64)).astype(np.int64)
+    y = np.asarray(y, np.float64)
+    n, n_feat = codes.shape
+    out = np.zeros(n_feat)
+    pred = np.full(n, forest.base)
+    lam = 1.0
+    for t in range(forest.num_trees):
+        g = pred - y
+        h = np.ones(n)
+        node = np.zeros(n, np.int64)
+        node_base = 0
+        for level in range(forest.depth):
+            n_nodes = 2**level
+            ids = node_base + np.arange(n_nodes)
+            Gs = np.zeros(n_nodes)
+            Hs = np.zeros(n_nodes)
+            np.add.at(Gs, node, g)
+            np.add.at(Hs, node, h)
+            f = forest.feat[t, ids]
+            thr = forest.thr[t, ids]
+            go_right = codes[np.arange(n), f[node]] > thr[node]
+            GL = np.zeros(n_nodes)
+            HL = np.zeros(n_nodes)
+            np.add.at(GL, node[~go_right], g[~go_right])
+            np.add.at(HL, node[~go_right], h[~go_right])
+            GR, HR = Gs - GL, Hs - HL
+            gain = GL**2 / (HL + lam) + GR**2 / (HR + lam) - Gs**2 / (Hs + lam)
+            live = thr < NUM_BINS
+            np.add.at(out, f[live], np.maximum(gain[live], 0.0))
+            node = 2 * node + go_right
+            node_base += n_nodes
+        idx = node
+        lv = forest.leaf[t, idx]
+        pred = pred + forest.learning_rate * lv
+    return out

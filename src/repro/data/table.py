@@ -1,0 +1,134 @@
+"""Partitioned columnar tables.
+
+The storage model mirrors the paper's setting: a table is split into N
+equal-size partitions ("the finest granularity at which the storage layer
+maintains statistics").  Columns are either numeric (float32) or categorical
+(int32 codes into a small dictionary).  We keep every column as a dense
+(num_partitions, rows_per_partition) array so that per-partition operations
+(sketch construction, per-partition query answers) are a single vectorized
+pass — the layout a TPU ingest pipeline would use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+NUMERIC = "numeric"
+CATEGORICAL = "categorical"
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSpec:
+    name: str
+    kind: str  # NUMERIC | CATEGORICAL
+    cardinality: int = 0  # for categorical columns: size of the code dictionary
+    positive: bool = False  # numeric column known to be > 0 (log-measures apply)
+    groupable: bool = False  # low-cardinality column usable in GROUP BY
+
+    def __post_init__(self):
+        if self.kind not in (NUMERIC, CATEGORICAL):
+            raise ValueError(f"bad column kind {self.kind!r}")
+        if self.kind == CATEGORICAL and self.cardinality <= 0:
+            raise ValueError(f"categorical column {self.name} needs cardinality")
+
+
+@dataclasses.dataclass
+class Table:
+    """A partitioned columnar table.
+
+    columns[name] has shape (num_partitions, rows_per_partition).
+    """
+
+    schema: tuple[ColumnSpec, ...]
+    columns: dict[str, np.ndarray]
+    name: str = "table"
+
+    def __post_init__(self):
+        shapes = {c.shape for c in self.columns.values()}
+        if len(shapes) != 1:
+            raise ValueError(f"inconsistent column shapes: {shapes}")
+        (shape,) = shapes
+        if len(shape) != 2:
+            raise ValueError(f"columns must be (parts, rows), got {shape}")
+        names = [s.name for s in self.schema]
+        if sorted(names) != sorted(self.columns):
+            raise ValueError("schema/columns mismatch")
+        for spec in self.schema:
+            col = self.columns[spec.name]
+            if spec.kind == NUMERIC and col.dtype != np.float32:
+                self.columns[spec.name] = col.astype(np.float32)
+            if spec.kind == CATEGORICAL and col.dtype != np.int32:
+                self.columns[spec.name] = col.astype(np.int32)
+
+    # ---- basic geometry -------------------------------------------------
+    @property
+    def num_partitions(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def rows_per_partition(self) -> int:
+        return next(iter(self.columns.values())).shape[1]
+
+    @property
+    def num_rows(self) -> int:
+        return self.num_partitions * self.rows_per_partition
+
+    def spec(self, name: str) -> ColumnSpec:
+        for s in self.schema:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    @property
+    def numeric_columns(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.schema if s.kind == NUMERIC)
+
+    @property
+    def categorical_columns(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.schema if s.kind == CATEGORICAL)
+
+    @property
+    def groupable_columns(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.schema if s.groupable)
+
+    # ---- layout manipulation -------------------------------------------
+    def flat(self, name: str) -> np.ndarray:
+        return self.columns[name].reshape(-1)
+
+    def with_layout(self, order: np.ndarray, name_suffix: str) -> "Table":
+        """Re-partition rows according to a global row order."""
+        n, r = self.num_partitions, self.rows_per_partition
+        cols = {k: v.reshape(-1)[order].reshape(n, r) for k, v in self.columns.items()}
+        return Table(self.schema, cols, name=f"{self.name}/{name_suffix}")
+
+    def sorted_by(self, column: str) -> "Table":
+        order = np.argsort(self.flat(column), kind="stable")
+        return self.with_layout(order, f"sorted:{column}")
+
+    def shuffled(self, seed: int = 0) -> "Table":
+        order = np.random.default_rng(seed).permutation(self.num_rows)
+        return self.with_layout(order, f"random:{seed}")
+
+    def repartitioned(self, num_partitions: int) -> "Table":
+        if self.num_rows % num_partitions:
+            raise ValueError("row count not divisible by partition count")
+        r = self.num_rows // num_partitions
+        cols = {k: v.reshape(num_partitions, r) for k, v in self.columns.items()}
+        return Table(self.schema, cols, name=f"{self.name}/p{num_partitions}")
+
+
+def from_flat(schema, columns: Mapping[str, np.ndarray], name: str) -> Table:
+    """Build a single-partition table from flat 1-D columns."""
+    return Table(tuple(schema), {k: np.asarray(v).reshape(1, -1) for k, v in columns.items()}, name=name)
+
+
+def concat_tables(tables: Sequence[Table]) -> Table:
+    """Bulk-append (the paper's ingest model): partitions are appended."""
+    base = tables[0]
+    cols = {
+        k: np.concatenate([t.columns[k] for t in tables], axis=0)
+        for k in base.columns
+    }
+    return Table(base.schema, cols, name=base.name)

@@ -1,0 +1,66 @@
+"""Logical-axis sharding constraints for model internals.
+
+Model code calls `constrain(x, "batch", None, "model")` at propagation
+choke points (post-embed activations, CE logits chunks, scan carries).
+The launch layer activates the axes with `set_logical_axes(mesh.axis_names)`
+before lowering; without activation (CPU smoke tests) every constraint is
+an identity, keeping the model code mesh-agnostic.
+
+"batch" maps to the tuple of live DP axes ("pod", "data"); "model"/"data"
+map to themselves when present.  Dims whose size does not divide the axis
+product fall back to None at constraint time (GSPMD would reject them).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: tuple[str, ...] = ()
+
+
+def set_logical_axes(axis_names) -> None:
+    global _ACTIVE
+    _ACTIVE = tuple(axis_names)
+
+
+def active() -> tuple[str, ...]:
+    return _ACTIVE
+
+
+def _resolve(tag):
+    if tag is None:
+        return None
+    if tag == "batch":
+        dp = tuple(a for a in ("pod", "data") if a in _ACTIVE)
+        return dp if len(dp) > 1 else (dp[0] if dp else None)
+    if tag == "seq":
+        # sequence parallelism: activations S-sharded on the tensor axis in
+        # the scan-carry/norm/residual regions (Megatron SP); GSPMD inserts
+        # the all-gather / reduce-scatter pairs at the TP region boundaries.
+        return "model" if "model" in _ACTIVE else None
+    return tag if tag in _ACTIVE else None
+
+
+def constrain(x: jax.Array, *tags):
+    if not _ACTIVE:
+        return x
+    axes = [_resolve(t) for t in tags]
+    while len(axes) < x.ndim:
+        axes.append(None)
+    # drop axes whose dim does not divide the mesh axis product
+    import numpy as np
+
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    fixed = []
+    for dim, ax in zip(x.shape, axes[: x.ndim]):
+        if ax is None:
+            fixed.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in names]))
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))

@@ -1,0 +1,197 @@
+"""Sharding rules: param-path patterns → PartitionSpecs (DP/FSDP/TP/EP/SP).
+
+The mesh axes are ("pod",) "data", "model" (launch/mesh.py).  Parallelism
+mapping (DESIGN §6):
+
+  * batch             → ("pod", "data")        data parallel
+  * vocab / heads / d_ff / experts → "model"   tensor / expert parallel
+  * parameter d_model axes → "data"            FSDP (ZeRO-3): params,
+    grads and optimizer state are sharded on the data axis and
+    all-gathered per scanned layer
+  * long-context KV/sequence → "model"         SP for decode caches
+
+Resolution is explicit logic on (basename, parent, rank) rather than a
+regex table: `wi` alone is ambiguous between a dense MLP (d, ff), an
+expert stack (E, d, ff) and an RG-LRU gate (nb, bs, bs).  Dimensions that
+do not divide their mesh axis fall back to replication, checked at spec
+build time so the dry-run never trips on an indivisible dim.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# tags: "F" = FSDP axis ("data"), "M" = tensor axis ("model")
+_NORM_NAMES = {"scale"}
+
+
+def _rule(path: str, rank: int) -> tuple:
+    """Spec tags for the UNSTACKED leaf of this path ('' = replicate)."""
+    base = path.rsplit("/", 1)[-1]
+    in_ffn = "/ffn/" in path or path.startswith("ffn/")
+    in_mix = "/mix/" in path or path.startswith("mix/")
+    if base == "table":  # embed (vocab, d)
+        return ("M", "F")
+    if base == "head":  # (d, vocab)
+        return ("F", "M")
+    if base in _NORM_NAMES or base in ("a_log", "d_skip", "dt_bias"):
+        return (None,) * rank
+    if base in ("wq", "wk", "wv"):  # (d, H*hd)
+        return ("F", "M")
+    if base in ("bq", "bk", "bv"):
+        return ("M",)
+    if base == "router":  # (d, E)
+        return ("F", None)
+    if base in ("wi", "wg"):
+        if in_ffn and rank == 3:  # experts (E, d, ff) — EP
+            return ("M", "F", None)
+        if in_mix and rank == 3:  # rglru block-diag gates (nb, bs, bs)
+            return (None, None, "M")
+        return ("F", "M")  # dense MLP (d, ff)
+    if base == "wr" and rank == 3:  # rglru gate
+        return (None, None, "M")
+    if base == "wo":
+        if in_ffn and rank == 3:  # experts (E, ff, d)
+            return ("M", None, "F")
+        return ("M", "F")  # (H*hd | ff | w, d)
+    if base in ("wdq",):  # MLA (d, q_lora)
+        return ("F", "M")
+    if base == "wuq":  # (q_lora, H*(dn+dr))
+        return ("M", None)
+    if base == "wdkv":  # (d, kr+dr) — 576 rarely divides; F on d only
+        return ("F", None)
+    if base == "wukv":  # (kr, H*(dn+dv))
+        return (None, "M")
+    if base in ("wx", "wy"):  # rglru in-proj (d, w)
+        return ("F", "M")
+    if base == "conv":  # depthwise (cw, w)
+        return (None, "M")
+    if base == "lam":
+        return ("M",)
+    if base == "win":  # ssd fused in-proj (d, mixed-groups)
+        return ("F", None)
+    if base == "wout":  # ssd out (din, d)
+        return ("M", "F")
+    if base == "pos":  # whisper positional table
+        return (None, None)
+    return (None,) * rank
+
+
+def _axis_name(tag, mesh: Mesh):
+    if tag == "F":
+        return "data" if "data" in mesh.axis_names else None
+    if tag == "M":
+        return "model" if "model" in mesh.axis_names else None
+    return tag
+
+
+def spec_for_path(path: str, shape: tuple[int, ...], mesh: Mesh, *,
+                  stacked: bool) -> P:
+    rank = len(shape) - (1 if stacked else 0)
+    body = _rule(path, rank)
+    axes: list = [None] if stacked else []
+    offset = 1 if stacked else 0
+    for i, tag in enumerate(body):
+        ax = _axis_name(tag, mesh)
+        dim_idx = i + offset
+        if ax is not None and (
+            dim_idx >= len(shape) or shape[dim_idx] % mesh.shape[ax] != 0
+        ):
+            ax = None
+        axes.append(ax)
+    while len(axes) < len(shape):
+        axes.append(None)
+    # EP fallback → intra-expert TP: when the expert count does not divide
+    # the model axis (mixtral: 8 experts on 16-way TP), shard the expert
+    # FFN width instead — otherwise GSPMD replicates ALL expert compute
+    # per device (measured 16× MoE FLOPs on the mixtral cells).
+    base = path.rsplit("/", 1)[-1]
+    if (("/ffn/" in path or path.startswith("ffn/")) and rank == 3
+            and base in ("wi", "wg", "wo") and axes[offset] is None):
+        m = _axis_name("M", mesh)
+        ff_dim = offset + 2 if base in ("wi", "wg") else offset + 1
+        if m is not None and shape[ff_dim] % mesh.shape[m] == 0:
+            axes[ff_dim] = m
+    return P(*axes[: len(shape)])
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(k.key) if hasattr(k, "key") else str(getattr(k, "idx", k))
+            for k in kp
+        )
+        out.append((path, leaf))
+    return out, treedef
+
+
+import re as _re
+
+
+def param_shardings(params_tree, mesh: Mesh):
+    """Same-structure tree of NamedShardings for a param (shape) pytree.
+
+    Also used for optimizer state (mapped over the same structure): int8
+    moment leaves are tuples (q, scale) — the trailing tuple index is
+    stripped so they inherit the parameter's rule, and indivisible dims
+    (the scale's trailing 1) fall back to replication automatically.
+    """
+    flat, treedef = _flatten_with_paths(params_tree)
+    shardings = []
+    for path, leaf in flat:
+        rule_path = _re.sub(r"/\d+$", "", path)
+        stacked = (
+            "slots/" in rule_path
+            or rule_path.startswith("cross/") or "/cross/" in rule_path
+            or "encoder/layers" in rule_path
+        )
+        spec = spec_for_path(rule_path, leaf.shape, mesh, stacked=stacked)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def batch_axes(mesh: Mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return dp if len(dp) > 1 else dp[0]
+
+
+def data_shardings(batch_tree, mesh: Mesh):
+    """Batch inputs: leading axis over the DP axes, rest replicated."""
+    dp = batch_axes(mesh)
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+    def one(leaf):
+        if leaf.ndim and leaf.shape[0] % dp_size == 0:
+            return NamedSharding(mesh, P(*([dp] + [None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, cfg, mesh: Mesh):
+    """KV/state caches: batch on DP axes; one feature dim on "model".
+
+    Leaves are stacked over units: (U, B, ...).  Axis 1 (batch) shards on
+    the DP axes when divisible; the widest trailing axis that divides the
+    model axis gets "model" (kv heads, head_dim, recurrence width, state).
+    """
+    dp = batch_axes(mesh)
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    m = mesh.shape.get("model", 1)
+
+    def one(leaf):
+        axes: list = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % dp_size == 0:
+            axes[1] = dp
+        for i in range(leaf.ndim - 1, 1, -1):
+            if leaf.shape[i] % m == 0 and leaf.shape[i] >= m:
+                axes[i] = "model"
+                break
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, cache_tree)

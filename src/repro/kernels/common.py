@@ -1,0 +1,29 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
+block shapes) and are VALIDATED on CPU in interpret mode — `interpret()`
+flips automatically when no TPU is present.  Block sizes are multiples of
+the (8, 128) f32 VREG tile so the same BlockSpecs are efficient on real
+hardware.
+"""
+from __future__ import annotations
+
+import jax
+
+LANE = 128
+SUBLANE = 8
+
+
+def interpret() -> bool:
+    """Pallas interpret mode: True unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_block(n: int, target: int, align: int) -> int:
+    """Largest aligned block <= max(target, align) that tiles padded n."""
+    b = min(round_up(n, align), round_up(target, align))
+    return max(b, align)

@@ -1,0 +1,104 @@
+"""Histogram / bincount kernels (DESIGN §4: §3.1 equi-depth + §3.2 counts).
+
+GPU implementations scatter into bins (atomics); the TPU adaptation
+reformulates binning as *compare-against-edges + matmul popcount*: each
+row tile produces a one-hot (rows × bins) matrix that the MXU reduces with
+a ones-vector contraction.  Two entry points share the pattern:
+
+* `histogram_range(x, edges)` — numeric values against per-partition
+  equi-depth bucket edges (B buckets = B+1 edges; final bucket inclusive).
+* `bincount(codes, card)` — exact categorical frequencies (the lossy-
+  counting replacement, DESIGN §3).
+
+Bins live in the output block's lane dimension (padded to 128), row tiles
+accumulate over the sequential grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, interpret, pick_block, round_up
+
+
+def _range_kernel(x_ref, lo_ref, hi_ref, last_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (1, bt)
+    lo = lo_ref[...]  # (1, bpad)
+    hi = hi_ref[...]
+    last = last_ref[...]  # (1, bpad) 1.0 on the final real bucket
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xt = x[0, :, None]  # (bt, 1)
+    onehot = (xt >= lo) & ((xt < hi) | ((last > 0) & (xt <= hi)))
+    # MXU contraction: ones(1, bt) @ onehot(bt, bpad)
+    o_ref[...] += jnp.sum(onehot.astype(jnp.float32), axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def histogram_range(x: jax.Array, edges: jax.Array, block_rows: int = 1024) -> jax.Array:
+    """(P, R) values + (P, B+1) edges → (P, B) bucket counts.
+
+    Values outside [edges[0], edges[-1]] fall into no bucket (matching the
+    reference); the final bucket includes its upper edge.
+    """
+    p, r = x.shape
+    nb = edges.shape[1] - 1
+    bt = pick_block(r, block_rows, LANE)
+    rp = round_up(r, bt)
+    bpad = round_up(nb, LANE)
+    inf = jnp.float32(jnp.inf)
+    xp = jnp.pad(x, ((0, 0), (0, rp - r)), constant_values=jnp.nan)
+    lo = jnp.pad(edges[:, :-1].astype(jnp.float32), ((0, 0), (0, bpad - nb)), constant_values=inf)
+    hi = jnp.pad(edges[:, 1:].astype(jnp.float32), ((0, 0), (0, bpad - nb)), constant_values=-inf)
+    last = jnp.zeros((p, bpad), jnp.float32).at[:, nb - 1].set(1.0)
+    out = pl.pallas_call(
+        _range_kernel,
+        grid=(p, rp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bpad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bpad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bpad), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bpad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, bpad), jnp.float32),
+        interpret=interpret(),
+    )(xp, lo, hi, last)
+    return out[:, :nb]
+
+
+def _bincount_kernel(codes_ref, o_ref):
+    c = codes_ref[...]  # (1, bt) int32; -1 = padding
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, o_ref.shape[1]), 1)
+    onehot = (c[0, :, None] == bins).astype(jnp.float32)  # (bt, bpad)
+    o_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("card", "block_rows"))
+def bincount(codes: jax.Array, card: int, block_rows: int = 1024) -> jax.Array:
+    """(P, R) int codes in [0, card) → (P, card) exact counts."""
+    p, r = codes.shape
+    bt = pick_block(r, block_rows, LANE)
+    rp = round_up(r, bt)
+    bpad = round_up(card, LANE)
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, 0), (0, rp - r)), constant_values=-1)
+    out = pl.pallas_call(
+        _bincount_kernel,
+        grid=(p, rp // bt),
+        in_specs=[pl.BlockSpec((1, bt), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, bpad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, bpad), jnp.float32),
+        interpret=interpret(),
+    )(cp)
+    return out[:, :card]

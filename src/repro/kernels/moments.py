@@ -1,0 +1,82 @@
+"""Fused moments sketch kernel (DESIGN §4: the §3.1 ingest pass).
+
+One streaming HBM→VMEM pass per partition computes ALL measure statistics
+the paper stores per column (§3.1 Table 2): min, max, Σx, Σx², and the
+log-transform variants min/max/Σlog/Σlog² — eight accumulators in one read
+instead of the four separate passes a sketch-per-pass implementation would
+make.  The kernel is memory-bound by construction (8 flops/elem vs 4 bytes
+read), so fusing the passes is the whole optimization.
+
+Grid: (partitions, row_tiles).  The row-tile axis accumulates into the
+(1, 8)-shaped output block using the sequential-grid revisiting pattern
+(output block index is independent of the reduced axis), which avoids
+scratch and works identically under interpret mode.
+
+Rows are padded to the lane width with neutral elements (+inf/-inf/0) by
+the ops wrapper; log statistics use max(x, tiny) exactly like the host
+reference so allclose tests are exact-modulo-float.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, interpret, pick_block, round_up
+
+NSTATS = 8  # min, max, sum, sumsq, logmin, logmax, logsum, logsumsq
+_TINY = 1e-30
+
+
+def _kernel(x_ref, valid_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (1, bt)
+    v = valid_ref[...]  # (1, bt) 1/0 row-validity mask
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[0, 0] = jnp.inf  # min
+        o_ref[0, 1] = -jnp.inf  # max
+        o_ref[0, 4] = jnp.inf  # logmin
+        o_ref[0, 5] = -jnp.inf  # logmax
+
+    big = jnp.where(v > 0, x, jnp.inf)
+    small = jnp.where(v > 0, x, -jnp.inf)
+    lx = jnp.log(jnp.maximum(x, _TINY))
+    lbig = jnp.where(v > 0, lx, jnp.inf)
+    lsmall = jnp.where(v > 0, lx, -jnp.inf)
+    xm = x * v
+    lm = lx * v
+    o_ref[0, 0] = jnp.minimum(o_ref[0, 0], jnp.min(big))
+    o_ref[0, 1] = jnp.maximum(o_ref[0, 1], jnp.max(small))
+    o_ref[0, 2] += jnp.sum(xm)
+    o_ref[0, 3] += jnp.sum(xm * x)
+    o_ref[0, 4] = jnp.minimum(o_ref[0, 4], jnp.min(lbig))
+    o_ref[0, 5] = jnp.maximum(o_ref[0, 5], jnp.max(lsmall))
+    o_ref[0, 6] += jnp.sum(lm)
+    o_ref[0, 7] += jnp.sum(lm * lx)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def moments(x: jax.Array, block_rows: int = 2048) -> jax.Array:
+    """(P, R) values → (P, NSTATS) fused measure statistics."""
+    p, r = x.shape
+    bt = pick_block(r, block_rows, LANE)
+    rp = round_up(r, bt)
+    pad = rp - r
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    valid = jnp.pad(jnp.ones((p, r), jnp.float32), ((0, 0), (0, pad)))
+    grid = (p, rp // bt)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, NSTATS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, NSTATS), jnp.float32),
+        interpret=interpret(),
+    )(xp, valid)

@@ -1,0 +1,50 @@
+"""Public jit'd entry points for the kernel layer.
+
+Importing from here gives the framework a single switch between the Pallas
+TPU kernels (validated in interpret mode off-TPU) and the pure-jnp
+references — `use_ref=True` is also what the numerics tests diff against.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import groupagg, histogram, moments, pdist, predicate, ref
+
+__all__ = [
+    "moments_op",
+    "histogram_range_op",
+    "bincount_op",
+    "pdist_sq_op",
+    "group_aggregate_op",
+    "predicate_eval_op",
+]
+
+
+def moments_op(x: jax.Array, use_ref: bool = False) -> jax.Array:
+    return ref.moments_ref(x) if use_ref else moments.moments(x)
+
+
+def histogram_range_op(x: jax.Array, edges: jax.Array, use_ref: bool = False):
+    if use_ref:
+        return ref.histogram_range_ref(x, edges)
+    return histogram.histogram_range(x, edges)
+
+
+def bincount_op(codes: jax.Array, card: int, use_ref: bool = False):
+    return ref.bincount_ref(codes, card) if use_ref else histogram.bincount(codes, card)
+
+
+def pdist_sq_op(x: jax.Array, centers: jax.Array, use_ref: bool = False):
+    return ref.pdist_sq_ref(x, centers) if use_ref else pdist.pdist_sq(x, centers)
+
+
+def group_aggregate_op(values, mask, codes, num_groups: int, use_ref: bool = False):
+    if use_ref:
+        return ref.group_aggregate_ref(values, mask, codes, num_groups)
+    return groupagg.group_aggregate(values, mask, codes, num_groups)
+
+
+def predicate_eval_op(cols, lo, hi, group_map, num_groups: int, use_ref: bool = False):
+    if use_ref:
+        return ref.predicate_eval_ref(cols, lo, hi, group_map)
+    return predicate.predicate_eval(cols, lo, hi, group_map, num_groups)

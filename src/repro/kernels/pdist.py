@@ -1,0 +1,64 @@
+"""Pairwise squared-distance kernel (DESIGN §4: §4.2 clustering assign).
+
+Clustering dominates picker latency in the paper (Table 5: 802ms of
+1002ms).  The hot loop is the KMeans assignment distance matrix
+‖x_i − c_j‖² which we compute as  x² − 2·x·cᵀ + c²  so the inner term is a
+(N×F)·(F×K) matmul on the MXU.  Tiles are 128-aligned in both output
+dimensions; the norms are folded in-kernel so the distance matrix never
+round-trips to HBM un-fused.
+
+Grid: (N/bn, K/bk, F/bf) with the contraction axis innermost (sequential
+revisiting accumulation into the output block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, interpret, pick_block, round_up
+
+
+def _kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (bn, bf)
+    c = c_ref[...].astype(jnp.float32)  # (bk, bf)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bn, bk)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (bn, 1)
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, bk)
+    o_ref[...] += xx + cc - 2.0 * prod
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "bf"))
+def pdist_sq(
+    x: jax.Array, centers: jax.Array, bn: int = 256, bk: int = 128, bf: int = 512
+) -> jax.Array:
+    """(N, F), (K, F) → (N, K) squared euclidean distances (≥ 0 clamped)."""
+    n, f = x.shape
+    k = centers.shape[0]
+    bn = pick_block(n, bn, 8)
+    bk = pick_block(k, bk, LANE)
+    bf = pick_block(f, bf, LANE)
+    np_, kp, fp = round_up(n, bn), round_up(k, bk), round_up(f, bf)
+    xp = jnp.pad(x, ((0, np_ - n), (0, fp - f)))
+    cp = jnp.pad(centers, ((0, kp - k), (0, fp - f)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // bn, kp // bk, fp // bf),
+        in_specs=[
+            pl.BlockSpec((bn, bf), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bf), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, kp), jnp.float32),
+        interpret=interpret(),
+    )(xp, cp)
+    return jnp.maximum(out[:n, :k], 0.0)

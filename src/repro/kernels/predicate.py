@@ -1,0 +1,93 @@
+"""Fused predicate-evaluation kernel (DESIGN §4: §3.2 executor filter).
+
+Evaluates an AND-of-OR-groups predicate over C single-column clauses in one
+VMEM pass.  The host wrapper gathers the referenced columns into a (C, R)
+stack (columns used by several clauses are duplicated — C ≤ 10 in the
+paper's clustering scope) and canonicalizes every clause to a half-open
+interval test  lo ≤ x < hi  (equality on coded categoricals becomes
+[v, v+1); negation flips to the complement pair handled by two clauses at
+IR level).  In-kernel, clause results are OR-combined within groups via a
+max contraction against the (C, G) group one-hot and AND-combined across
+groups via a min reduction — branch-free, VPU-only, one pass.
+
+Outputs both the row mask and the per-partition passing count (the
+selectivity ground truth used for picker training labels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, SUBLANE, interpret, pick_block, round_up
+
+
+def _kernel(x_ref, lo_ref, hi_ref, gmap_ref, o_ref, cnt_ref, *, num_groups: int):
+    x = x_ref[...].astype(jnp.float32)  # (1, C, bt)
+    lo = lo_ref[...]  # (1, C)
+    hi = hi_ref[...]
+    gmap = gmap_ref[...]  # (1, C, G) one-hot clause→group map
+
+    clause = (x[0] >= lo[0][:, None]) & (x[0] < hi[0][:, None])  # (C, bt)
+    cf = clause.astype(jnp.float32)
+    # OR within groups: max over member clauses = contraction with one-hot
+    # (values are 0/1 so max == min(1, sum) on disjoint clause maps;
+    # we use the max formulation for exactness with overlapping maps)
+    gm = gmap[0]  # (C, G)
+    grouped = jnp.max(
+        jnp.where(gm.T[:, :, None] > 0, cf[None, :, :], 0.0), axis=1
+    )  # (G, bt)
+    mask = jnp.min(grouped, axis=0)  # AND across groups
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    o_ref[0] = mask
+    cnt_ref[0, 0] += jnp.sum(mask)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "block_rows"))
+def predicate_eval(
+    cols: jax.Array,  # (P, C, R) gathered clause columns
+    lo: jax.Array,  # (P, C) or (C,) inclusive lower bounds
+    hi: jax.Array,  # (P, C) or (C,) exclusive upper bounds
+    group_map: jax.Array,  # (C, G) one-hot clause→OR-group membership
+    num_groups: int,
+    block_rows: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    """→ (mask (P, R) float 0/1, count (P,)) for the AND-of-ORs predicate."""
+    p, c, r = cols.shape
+    bt = pick_block(r, block_rows, LANE)
+    rp = round_up(r, bt)
+    if lo.ndim == 1:
+        lo = jnp.broadcast_to(lo[None], (p, c))
+        hi = jnp.broadcast_to(hi[None], (p, c))
+    # pad rows with NaN: fails every interval test => mask 0
+    xp = jnp.pad(cols.astype(jnp.float32), ((0, 0), (0, 0), (0, rp - r)),
+                 constant_values=jnp.nan)
+    gm = jnp.broadcast_to(
+        group_map.astype(jnp.float32)[None], (p, c, num_groups)
+    )
+    mask, cnt = pl.pallas_call(
+        functools.partial(_kernel, num_groups=num_groups),
+        grid=(p, rp // bt),
+        in_specs=[
+            pl.BlockSpec((1, c, bt), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, c, num_groups), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, rp), jnp.float32),
+            jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        ],
+        interpret=interpret(),
+    )(xp, lo, hi, gm)
+    return mask[:, :r], cnt[:, 0]

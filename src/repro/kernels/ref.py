@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+def moments_ref(x: jax.Array) -> jax.Array:
+    """(P, R) → (P, 8): min,max,sum,sumsq,logmin,logmax,logsum,logsumsq."""
+    x = x.astype(jnp.float32)
+    lx = jnp.log(jnp.maximum(x, _TINY))
+    return jnp.stack(
+        [
+            jnp.min(x, axis=1),
+            jnp.max(x, axis=1),
+            jnp.sum(x, axis=1),
+            jnp.sum(x * x, axis=1),
+            jnp.min(lx, axis=1),
+            jnp.max(lx, axis=1),
+            jnp.sum(lx, axis=1),
+            jnp.sum(lx * lx, axis=1),
+        ],
+        axis=1,
+    )
+
+
+def histogram_range_ref(x: jax.Array, edges: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    lo = edges[:, :-1].astype(jnp.float32)  # (P, B)
+    hi = edges[:, 1:].astype(jnp.float32)
+    nb = lo.shape[1]
+    xt = x[:, :, None]
+    inb = (xt >= lo[:, None, :]) & (xt < hi[:, None, :])
+    last = (xt >= lo[:, None, :]) & (xt <= hi[:, None, :])
+    sel = jnp.concatenate([inb[..., : nb - 1], last[..., nb - 1 :]], axis=-1)
+    return jnp.sum(sel.astype(jnp.float32), axis=1)
+
+
+def bincount_ref(codes: jax.Array, card: int) -> jax.Array:
+    onehot = jax.nn.one_hot(codes, card, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=1)
+
+
+def pdist_sq_ref(x: jax.Array, centers: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    c = centers.astype(jnp.float32)
+    d = x[:, None, :] - c[None, :, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def group_aggregate_ref(
+    values: jax.Array, mask: jax.Array, codes: jax.Array, num_groups: int
+) -> jax.Array:
+    masked = values.astype(jnp.float32) * mask[:, None, :].astype(jnp.float32)
+    onehot = jax.nn.one_hot(codes, num_groups, dtype=jnp.float32)  # (P, R, G)
+    return jnp.einsum("pvr,prg->pvg", masked, onehot)
+
+
+def predicate_eval_ref(
+    cols: jax.Array, lo: jax.Array, hi: jax.Array, group_map: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    x = cols.astype(jnp.float32)  # (P, C, R)
+    if lo.ndim == 1:
+        lo = jnp.broadcast_to(lo[None], x.shape[:2])
+        hi = jnp.broadcast_to(hi[None], x.shape[:2])
+    clause = (x >= lo[:, :, None]) & (x < hi[:, :, None])  # (P, C, R)
+    gm = group_map.astype(bool)  # (C, G)
+    grouped = jnp.stack(
+        [jnp.any(clause & gm[None, :, g, None], axis=1) for g in range(gm.shape[1])],
+        axis=1,
+    )  # (P, G, R)
+    mask = jnp.all(grouped, axis=1).astype(jnp.float32)
+    return mask, jnp.sum(mask, axis=1)

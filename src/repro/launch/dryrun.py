@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+# Multi-pod dry-run (assignment deliverable e).
+#
+# For every (arch × applicable shape × mesh ∈ {16×16, 2×16×16}):
+# lower + compile the right step function with production shardings, print
+# memory_analysis() / cost_analysis(), extract collective traffic from the
+# optimized HLO, and append a JSON row for launch/roofline.py.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+#         --shape train_4k --mesh both --out results/dryrun.json
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_archs, get_config
+from repro.distributed import sharding
+from repro.launch import hlo_stats, specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import SHAPES, applicable_shapes
+from repro.train import optimizer as opt
+from repro.train import steps as steps_mod
+
+
+def _microbatches(cfg, shape_name: str) -> int:
+    """Grad-accumulation factor keeping live activations in HBM budget."""
+    if SHAPES[shape_name].kind != "train":
+        return 1
+    act_cost = cfg.d_model * cfg.n_layers
+    if act_cost > 1e6:  # 405B-class
+        return 16
+    if act_cost > 2.5e5:
+        return 8
+    return 1
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.distributed.axes import set_logical_axes
+
+    set_logical_axes(mesh.axis_names)
+    shape = SHAPES[shape_name]
+    pshapes = lm.param_shapes(cfg)
+    pshard = sharding.param_shardings(pshapes, mesh)
+    cell = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": mesh.devices.size,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            ins = specs_mod.input_specs(cfg, shape_name)
+            # ≥100B params: int8 block-quantized Adam states (8-bit-Adam),
+            # the HBM trick that fits 405B on 256 × 16GB v5e chips.
+            ocfg = opt.AdamWConfig(
+                state_dtype="int8" if cfg.param_count() > 1e11 else "float32"
+            )
+            topts = steps_mod.TrainOptions(
+                num_microbatches=_microbatches(cfg, shape_name),
+                remat=True,
+                accum_dtype="bfloat16" if cfg.param_count() > 1e11 else "float32",
+            )
+            step = steps_mod.make_train_step(cfg, ocfg, topts)
+            ostate_shapes = jax.eval_shape(lambda p: opt.init_state(ocfg, p), pshapes)
+            oshard = sharding.param_shardings(ostate_shapes, mesh)
+            bshard = sharding.data_shardings(ins["batch"], mesh)
+            f = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = f.lower(pshapes, ostate_shapes, ins["batch"])
+        elif shape.kind == "prefill":
+            ins = specs_mod.input_specs(cfg, shape_name)
+            step = steps_mod.make_prefill_step(cfg)
+            bshard = sharding.data_shardings(ins["batch"], mesh)
+            f = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = f.lower(pshapes, ins["batch"])
+        else:  # decode
+            ins = specs_mod.input_specs(cfg, shape_name)
+            step = steps_mod.make_serve_step(cfg)
+            cshard = sharding.cache_shardings(ins["cache"], cfg, mesh)
+            tshard = sharding.data_shardings(ins["tokens"], mesh)
+            f = jax.jit(
+                step,
+                in_shardings=(pshard, cshard, tshard, NamedSharding(mesh, P())),
+                out_shardings=(None, cshard),
+                donate_argnums=(1,),
+            )
+            lowered = f.lower(pshapes, ins["cache"], ins["tokens"], ins["pos"])
+        cell["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        cell["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        cell["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "per_device_total": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        }
+    # builtin cost_analysis (counts scan bodies once — kept for reference)
+    ca = compiled.cost_analysis() or {}
+    cell["cost_analysis_raw"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+    # trip-count-aware per-device stats from the partitioned HLO
+    txt = compiled.as_text()
+    full = hlo_stats.analyze(txt, mesh.devices.size)
+    cell["cost"] = {"flops": full["flops"], "bytes_accessed": full["hbm_bytes"]}
+    cell["collectives"] = {
+        "num_collectives": full["num_collectives"],
+        "link_bytes_total": full["link_bytes_total"],
+        "by_kind": full["by_kind"],
+    }
+    ops_sorted = sorted(full["ops"], key=lambda o: -o["link_bytes"])
+    cell["collective_ops_sample"] = [
+        {k: o[k] for k in ("op", "bytes", "group", "mult", "link_bytes")}
+        for o in ops_sorted[:10]
+    ]
+    if verbose:
+        print(f"[{cell['arch']} × {cell['shape']} × {cell['mesh']}] "
+              f"compile={cell['compile_s']}s flops/dev={cell['cost']['flops']:.3g} "
+              f"mem/dev={cell.get('memory', {}).get('per_device_total', 0)/2**30:.2f}GiB "
+              f"coll_bytes/dev={cell['collectives']['link_bytes_total']:.3g}")
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(all_archs()) if args.arch == "all" else [args.arch.replace("-", "_")]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    rows = []
+    if args.append and os.path.exists(args.out):
+        rows = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in rows if "error" not in r}
+
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg) if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            for mp in meshes:
+                key = (arch, shape_name, "2x16x16" if mp else "16x16")
+                if key in done:
+                    continue
+                try:
+                    rows.append(lower_cell(arch, shape_name, mp))
+                except Exception as e:  # a failing cell is a bug — record it
+                    traceback.print_exc()
+                    rows.append({
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "error": f"{type(e).__name__}: {e}",
+                    })
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(rows, f, indent=1)
+    bad = [r for r in rows if "error" in r]
+    print(f"\n{len(rows) - len(bad)}/{len(rows)} cells OK; {len(bad)} failed")
+    for r in bad:
+        print("  FAIL", r["arch"], r["shape"], r["mesh"], "—", r["error"][:120])
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Production meshes (assignment MULTI-POD DRY-RUN step 1).
+
+A function, not a module-level constant: importing this module never
+touches jax device state — device counts are locked at first jax init, and
+only launch/dryrun.py (which sets XLA_FLAGS first) may build the 256/512-
+device meshes.  Tests build small meshes through the same function.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    """Small/test meshes with the same axis conventions."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+# TPU v5e hardware constants (assignment §Roofline)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~both directions aggregated per link)

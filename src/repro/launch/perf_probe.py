@@ -1,0 +1,81 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# Per-cell perf probe for the §Perf hillclimb loop: lower ONE cell with a
+# knob override and report the three roofline terms + deltas.
+#
+#   PYTHONPATH=src python -m repro.launch.perf_probe --arch llama3-405b \
+#       --shape prefill_32k --set attn.triangle_skip=false
+#
+# Knobs: attn.triangle_skip / attn.q_chunk / attn.kv_chunk (bool/int),
+#        train.microbatches (int), moe.capacity_factor (float),
+#        ce.chunk (int)
+
+import argparse
+import dataclasses
+import json
+
+from repro.launch import roofline
+from repro.launch.dryrun import lower_cell
+from repro.models import layers as layers_mod
+from repro.models import lm as lm_mod
+
+
+def apply_knob(knob: str, value: str):
+    if knob == "attn.triangle_skip":
+        layers_mod.ATTN_OPTS.triangle_skip = value.lower() in ("1", "true")
+    elif knob == "attn.q_chunk":
+        layers_mod.ATTN_OPTS.q_chunk = int(value)
+    elif knob == "attn.kv_chunk":
+        layers_mod.ATTN_OPTS.kv_chunk = int(value)
+    elif knob == "ce.chunk":
+        lm_mod.CE_CHUNK = int(value)
+    elif knob == "train.microbatches":
+        import repro.launch.dryrun as dr
+
+        dr._microbatches = lambda cfg, shape: int(value)
+    elif knob == "moe.capacity_factor":
+        import repro.configs as C
+
+        real = C.get_config
+
+        def patched(arch):
+            cfg = real(arch)
+            return dataclasses.replace(cfg, capacity_factor=float(value))
+
+        import repro.launch.dryrun as dr
+
+        dr.get_config = patched
+    else:
+        raise SystemExit(f"unknown knob {knob}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[], metavar="KNOB=VAL")
+    ap.add_argument("--tag", default="probe")
+    args = ap.parse_args()
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        apply_knob(k, v)
+    cell = lower_cell(args.arch.replace("-", "_"), args.shape, args.multi_pod,
+                      verbose=False)
+    r = roofline.analyze_row(cell)
+    out = {
+        "tag": args.tag,
+        "knobs": args.set,
+        "t_compute_s": r["t_compute_s"],
+        "t_memory_s": r["t_memory_s"],
+        "t_collective_s": r["t_collective_s"],
+        "dominant": r["dominant"],
+        "roofline_frac": r["roofline_frac"],
+        "mem_per_dev_gib": r.get("memory", {}).get("per_device_total", 0) / 2**30,
+        "by_kind": r["collectives"]["by_kind"],
+    }
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run JSON (assignment deliverable g).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  memory     = HLO_bytes_per_device / HBM_bw               (819e9)
+  collective = link_bytes_per_device / ICI_bw              (50e9)
+
+cost_analysis() on this backend reports per-device numbers (verified on a
+2-device probe); collective link bytes come from launch/hlo_stats.py ring
+estimates.  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per step for
+train; 2·N·B for one decode token; 2·N·D for prefill.  The ratio
+MODEL_FLOPS / (HLO_FLOPs × devices) measures how much compiled compute is
+"useful" (remat recompute, masked-out attention and dispatch overhead all
+push it below 1; values > 1 flag a *undercounted* HLO, e.g. scan bodies
+measured once — annotated when detected).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import SHAPES
+
+
+def model_flops(row: dict) -> float:
+    shape = SHAPES[row["shape"]]
+    n_active = row["active_params"]
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def model_min_bytes(row: dict) -> float:
+    """Intrinsic per-step HBM floor (global): weights once (+cache for
+    decode) in bf16 — the quantity a perfect schedule must still read."""
+    shape = SHAPES[row["shape"]]
+    weights = 2.0 * row["active_params"]
+    if shape.kind == "train":
+        # fwd+bwd read weights, write grads ≈ 3× weight traffic is the
+        # floor only when activations fit; activations add ≥ 2·B·S·d·L
+        # which we fold in via the measured term — keep the weights floor.
+        return 3.0 * weights
+    if shape.kind == "prefill":
+        return weights
+    # decode: weights + the KV/state cache read once per token
+    cache = row.get("memory", {}).get("argument_bytes", 0) * row["devices"]
+    return weights + 0.5 * cache  # args include params; avoid double count
+
+
+def analyze_row(row: dict) -> dict:
+    if "error" in row:
+        return dict(row)
+    dev = row["devices"]
+    flops_dev = row["cost"]["flops"]
+    bytes_dev = row["cost"]["bytes_accessed"]
+    coll_dev = row["collectives"]["link_bytes_total"]
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(row)
+    useful = mf / max(flops_dev * dev, 1.0)
+    bound_time = max(terms.values())
+    # intrinsic step time: the larger of the model-FLOPs time and the
+    # model-bytes floor time (decode/prefill are legitimately memory-bound;
+    # measuring them against a FLOPs roofline would be meaningless)
+    t_intrinsic = max(
+        mf / dev / PEAK_FLOPS_BF16,
+        model_min_bytes(row) / dev / HBM_BW,
+    )
+    frac = t_intrinsic / max(bound_time, 1e-30)
+    out = dict(row)
+    out.update(
+        {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_flops_ratio": useful,
+            "roofline_frac": min(frac, 1.0),
+        }
+    )
+    return out
+
+
+_SUGGEST = {
+    "compute": "cut non-useful FLOPs (triangle-skip attention, tighter MoE capacity, less remat recompute)",
+    "memory": "raise arithmetic intensity (fuse elementwise chains, bigger microbatches, bf16 buffers)",
+    "collective": "re-shard to cut traffic (FSDP→replicated small params, overlap AG/RS with compute, int8-compress cross-pod grads)",
+}
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | "
+        "dominant | 6ND/HLO | roofline frac | next lever |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if "error" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — | {r['error'][:60]} |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+            f"| {r['t_collective_s']:.4g} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_frac']:.2%} "
+            f"| {_SUGGEST[r['dominant']]} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--md", default="results/roofline.md")
+    ap.add_argument("--mesh", default="16x16", help="roofline table mesh filter")
+    args = ap.parse_args()
+    rows = [analyze_row(r) for r in json.load(open(args.dryrun))]
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    table_rows = [r for r in rows if r.get("mesh") == args.mesh or "error" in r]
+    md = markdown_table(table_rows)
+    with open(args.md, "w") as f:
+        f.write(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

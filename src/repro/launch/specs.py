@@ -1,0 +1,63 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+Weak-type-correct, shardable, no device allocation (MULTI-POD DRY-RUN
+step 2).  Modality frontends are stubs per the assignment: whisper gets
+precomputed (B, 1500, d) frame embeddings, internvl gets (B, 256, d) patch
+embeddings; for the VLM the text length shrinks so img+text == seq_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig, SHAPES, ShapeSpec
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.family == "vlm":
+        s_txt = s - cfg.n_img_tokens
+        batch["img_embeds"] = sds((b, cfg.n_img_tokens, cfg.d_model), BF16)
+        batch["tokens"] = sds((b, s_txt), I32)
+        batch["targets"] = sds((b, s_txt), I32)
+    elif cfg.family == "encdec":
+        batch["enc_frames"] = sds((b, cfg.enc_positions, cfg.d_model), BF16)
+        batch["tokens"] = sds((b, s), I32)
+        batch["targets"] = sds((b, s), I32)
+    else:
+        batch["tokens"] = sds((b, s), I32)
+        batch["targets"] = sds((b, s), I32)
+    batch["loss_weights"] = sds((b,), F32)  # PS³ data-plane weights
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """serve_step inputs: one new token + a KV cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    tokens = sds((b, 1), I32)
+    pos = sds((), I32)
+    return cache, tokens, pos
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        batch = train_batch_specs(cfg, shape)
+        batch.pop("targets")
+        batch.pop("loss_weights")
+        return {"batch": batch}
+    cache, tokens, pos = decode_specs(cfg, shape)
+    return {"cache": cache, "tokens": tokens, "pos": pos}

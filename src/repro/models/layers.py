@@ -1,0 +1,298 @@
+"""Core transformer building blocks (pure functions over param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks are stacked along a
+    leading axis and consumed with lax.scan (compact HLO ⇒ tractable
+    512-way SPMD compiles; see DESIGN §6).
+  * activations/params bf16, softmax/norm statistics f32.
+  * attention is the flash-pattern two-level chunk scan (online softmax),
+    never materializing the (S × S) score matrix — the TPU-native
+    equivalent of flash attention at the XLA level.  `triangle_skip`
+    (§Perf iteration 1) unrolls the query-chunk loop and shortens each
+    inner KV scan to the causal/window-reachable prefix, cutting the
+    masked-out FLOPs XLA would otherwise schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DTYPE = jnp.bfloat16
+
+# flipped by configs/launchers; a §Perf knob (see EXPERIMENTS.md §Perf)
+@dataclasses.dataclass
+class AttnOptions:
+    q_chunk: int = 2048
+    kv_chunk: int = 1024
+    triangle_skip: bool = True
+
+
+ATTN_OPTS = AttnOptions()
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, scale_axis=0, dtype=DTYPE):
+    scale = 1.0 / jnp.sqrt(jnp.maximum(shape[scale_axis], 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# norms / mlp / embeddings
+# --------------------------------------------------------------------------
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), DTYPE)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, d, ff):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "wi": dense_init(k1, (d, ff)),
+        "wg": dense_init(k2, (d, ff)),
+        "wo": dense_init(k3, (ff, d)),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]
+
+
+def embed_init(key, vocab, d):
+    return {"table": dense_init(key, (vocab, d), scale_axis=1)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    return x @ p["table"].T  # tied; untied heads pass their own table
+
+
+# --------------------------------------------------------------------------
+# rotary embedding
+# --------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    if x.ndim == ang.ndim + 1:  # broadcast over heads
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+# --------------------------------------------------------------------------
+# flash-pattern chunked attention
+# --------------------------------------------------------------------------
+def _block_attn(q, k, v, bias):
+    """One (q-chunk, kv-chunk) online-softmax partial.
+
+    q: (B, H, Tq, D), k/v: (B, H, Tk, D), bias: (B, 1|H, Tq, Tk) additive.
+    Returns (m, l, o) partials in f32.
+    """
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s + bias
+    m = jnp.max(s, axis=-1)  # (B, H, Tq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def _combine(acc, new):
+    m0, l0, o0 = acc
+    m1, l1, o1 = new
+    m = jnp.maximum(m0, m1)
+    a0 = jnp.exp(m0 - m)
+    a1 = jnp.exp(m1 - m)
+    return m, l0 * a0 + l1 * a1, o0 * a0[..., None] + o1 * a1[..., None]
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, K, D)
+    v: jax.Array,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    opts: AttnOptions | None = None,
+) -> jax.Array:
+    """GQA flash-pattern attention; returns (B, Sq, H, D).
+
+    `q_offset` is the absolute position of q[0] relative to k[0] (prefill:
+    0; not used for single-token decode which has its own path).
+    """
+    opts = opts or ATTN_OPTS
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA)
+    rep = h // kh
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qc = min(opts.q_chunk, sq)
+    kc = min(opts.kv_chunk, sk)
+    nq = -(-sq // qc)
+    nk = -(-sk // kc)
+    # pad to chunk multiples
+    qpad, kpad = nq * qc - sq, nk * kc - sk
+    q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+
+    # (B, H, S, D) layout; expand kv heads to q heads (GQA)
+    qt = (q.swapaxes(1, 2) * scale).astype(q.dtype)
+    kt = jnp.repeat(k.swapaxes(1, 2), rep, axis=1)
+    vt = jnp.repeat(v.swapaxes(1, 2), rep, axis=1)
+
+    kt_chunks = kt.reshape(b, h, nk, kc, d)
+    vt_chunks = vt.reshape(b, h, nk, kc, dv)
+
+    def bias_for(qi, ki):
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+        kpos = ki * kc + jnp.arange(kc)
+        ok = kpos[None, :] < sk  # mask kv padding
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        return jnp.where(ok, 0.0, -jnp.inf)[None, None, :, :]  # (1,1,Tq,Tk)
+
+    def q_block(qi, qblk):
+        init = (
+            jnp.full((b, h, qc), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, qc), jnp.float32),
+            jnp.zeros((b, h, qc, dv), jnp.float32),
+        )
+        # remat the kv-chunk body: backward recomputes the (Tq × Tk) block
+        # probabilities instead of saving one per scan step (flash-style)
+        @jax.checkpoint
+        def body(acc, ki):
+            part = _block_attn(
+                qblk, kt_chunks[:, :, ki], vt_chunks[:, :, ki], bias_for(qi, ki)
+            )
+            return _combine(acc, part), None
+
+        if opts.triangle_skip:
+            # static python loop; inner scan only over reachable kv chunks
+            hi = nk if not causal else min(nk, (q_offset + (qi + 1) * qc - 1) // kc + 1)
+            lo = 0
+            if window > 0:
+                lo = max(0, (q_offset + qi * qc - window + 1) // kc)
+            hi = max(hi, lo + 1)
+            acc, _ = jax.lax.scan(body, init, jnp.arange(lo, hi))
+        else:
+            acc, _ = jax.lax.scan(body, init, jnp.arange(nk))
+        m, l, o = acc
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    outs = []
+    for qi in range(nq):
+        qblk = jax.lax.dynamic_slice_in_dim(qt, qi * qc, qc, axis=2)
+        outs.append(q_block(qi, qblk))
+    out = jnp.concatenate(outs, axis=2) if nq > 1 else outs[0]
+    out = out[:, :, :sq].swapaxes(1, 2).astype(q.dtype)  # (B, Sq, H, D)
+    return out
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (init/apply for train+prefill and decode)
+# --------------------------------------------------------------------------
+def attn_init(key, cfg):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = split_keys(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, h * hd)),
+        "wk": dense_init(k2, (d, kh * hd)),
+        "wv": dense_init(k3, (d, kh * hd)),
+        "wo": dense_init(k4, (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), DTYPE)
+        p["bk"] = jnp.zeros((kh * hd,), DTYPE)
+        p["bv"] = jnp.zeros((kh * hd,), DTYPE)
+    return p
+
+
+def attn_qkv(p, x, cfg, positions, with_rope=True):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    if with_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg, *, causal=True, window=0, positions=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = attn_qkv(p, x, cfg, positions)
+    o = chunked_attention(q, k, v, causal=causal, window=window)
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"], (k, v)
+
+
+def attn_decode(p, x, cfg, cache_k, cache_v, pos, *, window=0):
+    """Single-token decode. x: (B, 1, d); cache: (B, S, K, hd) (ring when
+    window > 0).  `pos` is the absolute position (scalar int array).
+    Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos_arr = jnp.full((b, 1), pos)
+    q, k, v = attn_qkv(p, x, cfg, pos_arr)
+    s_max = cache_k.shape[1]
+    slot = pos % s_max if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    # attend over the cache
+    rep = h // kh
+    kt = jnp.repeat(ck, rep, axis=2)  # (B, S, H, hd)
+    vt = jnp.repeat(cv, rep, axis=2)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, kt,
+                   preferred_element_type=jnp.float32)  # (B, H, 1, S)
+    idx = jnp.arange(s_max)
+    if window > 0:
+        # ring buffer: slot i holds absolute position (filled gradually)
+        abs_pos = jnp.where(idx <= slot, pos - (slot - idx), pos - (slot + s_max - idx))
+        ok = (abs_pos >= 0) & (abs_pos > pos - max(window, 1)) & (abs_pos <= pos)
+    else:
+        ok = idx <= pos
+    s = jnp.where(ok[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(vt.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vt, preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    return o @ p["wo"], ck, cv

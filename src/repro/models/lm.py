@@ -1,0 +1,648 @@
+"""Model assembly: decoder LMs, enc-dec (whisper), VLM (internvl) — all
+families of the assigned pool behind one API.
+
+  init_params(cfg, key)                → param pytree (real arrays)
+  param_shapes(cfg)                    → ShapeDtypeStruct pytree (dry-run)
+  loss_fn(cfg, params, batch)          → (scalar, metrics)
+  prefill(cfg, params, tokens, ...)    → (logits_last, cache)
+  decode_step(cfg, params, cache, tok, pos) → (logits, cache)
+
+Layer stacking: layers are grouped into repeating *units* of
+`len(cfg.block_pattern)` slots; per-slot parameters are stacked across
+units and consumed by one lax.scan (compact HLO ⇒ tractable 512-way SPMD
+compiles).  Ragged tails (38 = 12×3 + 2) pad to a full unit with inactive
+slots (residual pass-through).  Heterogeneous caches (KV / conv+recurrent
+/ conv+ssm) are per-slot stacked pytrees carried through the same scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import constrain
+from repro.models import mla, moe, rglru, ssd
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    DTYPE,
+    attn_decode,
+    attn_apply,
+    attn_init,
+    dense_init,
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    split_keys,
+    unembed,
+)
+
+
+# --------------------------------------------------------------------------
+# block init / apply
+# --------------------------------------------------------------------------
+def _mix_init(key, cfg: ModelConfig, kind: str):
+    if kind in ("attn", "moe"):
+        return mla.mla_init(key, cfg) if cfg.is_mla else attn_init(key, cfg)
+    if kind == "rglru":
+        return rglru.rglru_init(key, cfg)
+    if kind == "ssd":
+        return ssd.ssd_init(key, cfg)
+    raise ValueError(kind)
+
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": rmsnorm_init(d), "mix": _mix_init(k1, cfg, kind)}
+    if kind == "ssd":
+        return p  # mamba2 block has no separate MLP
+    p["norm2"] = rmsnorm_init(d)
+    if kind == "moe":
+        p["ffn"] = moe.moe_init(k2, cfg)
+    else:
+        p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _mix_apply(p, x, cfg, kind, *, causal=True, positions=None):
+    """Full-sequence mixer. Returns (out, cache_contrib)."""
+    if kind in ("attn", "moe"):
+        window = cfg.window if cfg.window > 0 else 0
+        if cfg.is_mla:
+            return mla.mla_apply(p, x, cfg, positions=positions)
+        return attn_apply(p, x, cfg, causal=causal, window=window, positions=positions)
+    if kind == "rglru":
+        out, st = rglru.rglru_apply(p, x, cfg)
+        return out, st
+    if kind == "ssd":
+        out, st = ssd.ssd_apply(p, x, cfg)
+        return out, st
+    raise ValueError(kind)
+
+
+def _block_apply(p, x, cfg, kind, *, active=True, causal=True, positions=None):
+    """Residual block. Returns (x, cache_contrib, aux)."""
+    h, cache = _mix_apply(
+        p["mix"], rmsnorm(p["norm1"], x, cfg.norm_eps), cfg, kind,
+        causal=causal, positions=positions,
+    )
+    gate = jnp.asarray(active, h.dtype)  # traced 0/1 for padded tail slots
+    x = x + gate * h
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    if kind == "ssd":
+        return x, cache, aux
+    h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if kind == "moe":
+        out, moe_aux = moe.moe_apply(p["ffn"], h2, cfg)
+        gate32 = jnp.asarray(active, jnp.float32)
+        aux = {"lb_loss": gate32 * moe_aux["lb_loss"], "z_loss": gate32 * moe_aux["z_loss"]}
+    else:
+        out = mlp(p["ffn"], h2)
+    x = x + gate * out
+    return x, cache, aux
+
+
+# --------------------------------------------------------------------------
+# unit (pattern period) machinery
+# --------------------------------------------------------------------------
+def _units(cfg: ModelConfig):
+    period = len(cfg.block_pattern)
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    n_units = -(-n_scan // period)
+    # active flags for the padded tail
+    active = [[u * period + j < n_scan for j in range(period)] for u in range(n_units)]
+    return period, n_units, active
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = split_keys(key, 8)
+    d = cfg.d_model
+    period, n_units, _ = _units(cfg)
+    params: dict = {
+        "embed": embed_init(keys[0], cfg.vocab, d),
+        "final_norm": rmsnorm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (d, cfg.vocab))
+    # per-slot stacked layer params
+    slots = []
+    for j, kind in enumerate(cfg.block_pattern):
+        unit_ps = [
+            _block_init(jax.random.fold_in(keys[2], u * period + j), cfg, kind)
+            for u in range(n_units)
+        ]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *unit_ps))
+    params["slots"] = tuple(slots)
+    if cfg.first_dense_layers:
+        # deepseek: leading dense layers (attn + plain MLP)
+        params["lead"] = [
+            {
+                "norm1": rmsnorm_init(d),
+                "mix": _mix_init(jax.random.fold_in(keys[3], i), cfg, "attn"),
+                "norm2": rmsnorm_init(d),
+                "ffn": mlp_init(jax.random.fold_in(keys[4], i), d, cfg.d_ff),
+            }
+            for i in range(cfg.first_dense_layers)
+        ]
+    if cfg.family == "encdec":
+        enc = []
+        for i in range(cfg.n_enc_layers):
+            enc.append(_block_init(jax.random.fold_in(keys[5], i), cfg, "attn"))
+        params["encoder"] = {
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+            "norm": rmsnorm_init(d),
+            "pos": dense_init(keys[6], (cfg.enc_positions, d)),
+        }
+        xa = [
+            {"norm": rmsnorm_init(d), "attn": attn_init(jax.random.fold_in(keys[7], i), cfg)}
+            for i in range(cfg.n_layers)
+        ]
+        params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xa)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# forward (train path)
+# --------------------------------------------------------------------------
+# Remat policy for the layer scan: when True (set by the dry-run/train
+# launchers via steps.TrainOptions) each unit's backward recomputes its
+# internals and only the bf16 carries are saved across layers — the
+# standard activation-checkpointing memory/compute trade.  CPU smoke tests
+# leave it off.
+REMAT_UNITS = False
+
+
+def _scan_blocks(params, x, cfg, *, causal=True, positions=None):
+    """Run all units via lax.scan. Returns (x, aux_sums)."""
+    period, n_units, active = _units(cfg)
+    active_arr = jnp.asarray(active, jnp.float32)  # (n_units, period)
+
+    def unit(carry, inp):
+        x, lb, zl = carry
+        slot_params, act = inp
+        for j, kind in enumerate(cfg.block_pattern):
+            x, _, aux = _block_apply(
+                slot_params[j], x, cfg, kind, active=act[j], causal=causal,
+                positions=positions,
+            )
+            x = constrain(x, "batch", "seq", None)
+            lb = lb + aux["lb_loss"]
+            zl = zl + aux["z_loss"]
+        return (x, lb, zl), None
+
+    if REMAT_UNITS:
+        unit = jax.checkpoint(unit)
+    (x, lb, zl), _ = jax.lax.scan(
+        unit,
+        (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (params["slots"], active_arr),
+    )
+    return x, {"lb_loss": lb, "z_loss": zl}
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, *, img_embeds=None,
+                   enc_frames=None):
+    """Final-norm hidden states (B, S, d) for the token positions.
+
+    tokens: (B, S) int32.  VLM: img_embeds (B, n_img, d) prepended (their
+    positions are stripped from the output).  enc-dec: enc_frames
+    (B, enc_positions, d) precomputed frame embeddings (conv stub).
+    """
+    x = embed(params["embed"], tokens).astype(DTYPE)
+    if cfg.family == "vlm" and img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(DTYPE), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, enc_frames)
+
+    if cfg.first_dense_layers:
+        for lp in params["lead"]:
+            xh, _, _ = _block_apply(lp, x, cfg, "attn", positions=positions)
+            x = xh
+
+    if cfg.family == "encdec":
+        x, aux = _scan_decoder_with_cross(cfg, params, x, enc_out, positions)
+    else:
+        x, aux = _scan_blocks(params, x, cfg, positions=positions)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm" and img_embeds is not None:
+        x = x[:, img_embeds.shape[1] :]
+    return x, aux
+
+
+def _head_table(cfg, params):
+    return params["embed"]["table"].T if cfg.tie_embeddings else params["head"]
+
+
+def forward(cfg: ModelConfig, params, tokens, *, img_embeds=None, enc_frames=None):
+    """Full-sequence token logits (test/serve path — materializes logits)."""
+    x, aux = forward_hidden(cfg, params, tokens, img_embeds=img_embeds,
+                            enc_frames=enc_frames)
+    return x @ _head_table(cfg, params), aux
+
+
+def _encode(cfg, params, frames):
+    enc = params["encoder"]
+    x = frames.astype(DTYPE) + enc["pos"][None, : frames.shape[1]]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def layer(x, lp):
+        x, _, _ = _block_apply(lp, x, cfg, "attn", causal=False, positions=positions)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, enc["layers"])
+    return rmsnorm(enc["norm"], x, cfg.norm_eps)
+
+
+def _scan_decoder_with_cross(cfg, params, x, enc_out, positions):
+    """Whisper decoder: self-attn + cross-attn + mlp per layer."""
+    from repro.models.layers import attn_qkv, chunked_attention
+
+    b, s, d = x.shape
+    eb, es, _ = enc_out.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(es)[None, :], (eb, es))
+
+    def unit(carry, inp):
+        x, lb, zl = carry
+        slot_params, act, xp = inp
+        # self-attention + mlp (standard block)
+        x, _, aux = _block_apply(slot_params[0], x, cfg, "attn", active=act[0],
+                                 positions=positions)
+        # cross attention
+        h = rmsnorm(xp["norm"], x, cfg.norm_eps)
+        q, _, _ = attn_qkv(xp["attn"], h, cfg, positions, with_rope=False)
+        _, k, v = attn_qkv(xp["attn"], enc_out, cfg, enc_pos, with_rope=False)
+        o = chunked_attention(q, k, v, causal=False)
+        o = o.reshape(b, s, cfg.n_heads * cfg.d_head) @ xp["attn"]["wo"]
+        x = x + jnp.asarray(act[0], o.dtype) * o
+        return (x, lb + aux["lb_loss"], zl + aux["z_loss"]), None
+
+    period, n_units, active = _units(cfg)
+    active_arr = jnp.asarray(active, jnp.float32)
+    (x, lb, zl), _ = jax.lax.scan(
+        unit,
+        (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (params["slots"], active_arr, params["cross"]),
+    )
+    return x, {"lb_loss": lb, "z_loss": zl}
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+CE_CHUNK = 1024  # sequence-chunked cross entropy (never materialize logits)
+
+
+def chunked_ce(h, head, targets, weights=None, chunk=CE_CHUNK):
+    """Sequence-chunked softmax CE: (B,S,d)·(d,V) → scalar without ever
+    holding the (B, S, V) f32 logits — per chunk bf16 logits + f32 LSE,
+    rematerialized in the backward (jax.checkpoint around the chunk body).
+
+    Returns (weighted mean nll, mean lse² for z-loss).
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nc = h.shape[1] // chunk
+    valid = (jnp.arange(h.shape[1]) < s).astype(jnp.float32)
+    w = jnp.ones((b,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    wn = w / jnp.maximum(w.sum(), 1e-9)
+
+    @jax.checkpoint
+    def body(carry, i):
+        nll_sum, zl_sum = carry
+        hs = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        ts = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(valid, i * chunk, chunk, axis=0)
+        logits = (hs @ head).astype(jnp.float32)  # (B, C, V)
+        logits = constrain(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)  # (B, C)
+        gold = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * vs[None, :]
+        nll_sum = nll_sum + jnp.sum(nll * wn[:, None])
+        zl_sum = zl_sum + jnp.sum((lse * vs[None, :]) ** 2 * wn[:, None])
+        return (nll_sum, zl_sum), None
+
+    (nll_sum, zl_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(nc),
+    )
+    return nll_sum / s, zl_sum / s
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> tuple[jax.Array, dict]:
+    """batch: {tokens, targets, loss_weights?, img_embeds?, enc_frames?}.
+
+    loss_weights (B,) are the PS³ data-plane partition weights (§2.4
+    estimator applied to the training objective: weighted per-sequence CE).
+    """
+    h, aux = forward_hidden(
+        cfg,
+        params,
+        batch["tokens"],
+        img_embeds=batch.get("img_embeds"),
+        enc_frames=batch.get("enc_frames"),
+    )
+    h = constrain(h, "batch", None, None)  # un-shard S before the CE chunking
+    loss, zl = chunked_ce(
+        h, _head_table(cfg, params), batch["targets"], batch.get("loss_weights")
+    )
+    total = loss + cfg.router_aux_coef * aux["lb_loss"] + 1e-4 * (aux["z_loss"] + zl)
+    return total, {"ce": loss, **aux}
+
+
+# --------------------------------------------------------------------------
+# serve path: prefill + decode
+# --------------------------------------------------------------------------
+def _slot_cache_init(cfg, kind, batch, max_len):
+    kh, hd = cfg.n_kv_heads, cfg.d_head
+    d = cfg.d_model
+    if kind in ("attn", "moe"):
+        if cfg.is_mla:
+            return {
+                "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), DTYPE),
+                "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), DTYPE),
+            }
+        s = min(max_len, cfg.window) if cfg.window > 0 else max_len
+        return {
+            "k": jnp.zeros((batch, s, kh, hd), DTYPE),
+            "v": jnp.zeros((batch, s, kh, hd), DTYPE),
+        }
+    if kind == "rglru":
+        w = cfg.rglru_width or d
+        return {
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), DTYPE),
+            "rec": jnp.zeros((batch, w), jnp.float32),
+        }
+    if kind == "ssd":
+        din, h, p_, g, n = ssd.ssd_dims(cfg)
+        return {
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, din + 2 * g * n), DTYPE),
+            "ssm": jnp.zeros((batch, h, p_, n), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-slot stacked cache pytrees (+ lead/cross extras where present)."""
+    period, n_units, _ = _units(cfg)
+    cache = {
+        "slots": tuple(
+            jax.tree.map(
+                lambda x: jnp.stack([x] * n_units),
+                _slot_cache_init(cfg, kind, batch, max_len),
+            )
+            for kind in cfg.block_pattern
+        )
+    }
+    if cfg.first_dense_layers:
+        cache["lead"] = [
+            _slot_cache_init(cfg, "attn", batch, max_len)
+            for _ in range(cfg.first_dense_layers)
+        ]
+    if cfg.family == "encdec":
+        kh, hd = cfg.n_kv_heads, cfg.d_head
+        cache["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.enc_positions, kh, hd), DTYPE
+        )
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def _mix_decode(p, x, cfg, kind, slot_cache, pos):
+    if kind in ("attn", "moe"):
+        if cfg.is_mla:
+            out, cc, ck = mla.mla_decode(p, x, cfg, slot_cache["ckv"], slot_cache["kpe"], pos)
+            return out, {"ckv": cc, "kpe": ck}
+        out, ck, cv = attn_decode(
+            p, x, cfg, slot_cache["k"], slot_cache["v"], pos, window=cfg.window
+        )
+        return out, {"k": ck, "v": cv}
+    if kind == "rglru":
+        out, (conv, rec) = rglru.rglru_decode(p, x, cfg, slot_cache["conv"], slot_cache["rec"])
+        return out, {"conv": conv, "rec": rec}
+    if kind == "ssd":
+        out, (conv, st) = ssd.ssd_decode(p, x, cfg, slot_cache["conv"], slot_cache["ssm"])
+        return out, {"conv": conv, "ssm": st}
+    raise ValueError(kind)
+
+
+def _block_decode(p, x, cfg, kind, slot_cache, pos, active, cross=None, cross_kv=None):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    out, new_cache = _mix_decode(p["mix"], h, cfg, kind, slot_cache, pos)
+    active = jnp.asarray(active, x.dtype)
+    x = x + active * out
+    if kind == "ssd":
+        return x, new_cache
+    h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if kind == "moe":
+        out2, _ = moe.moe_apply(p["ffn"], h2, cfg)
+    else:
+        out2 = mlp(p["ffn"], h2)
+    x = x + active * out2
+    if cross is not None:  # whisper cross-attention (decode)
+        from repro.models.layers import attn_qkv
+
+        b = x.shape[0]
+        hh = rmsnorm(cross["norm"], x, cfg.norm_eps)
+        q, _, _ = attn_qkv(cross["attn"], hh, cfg, jnp.zeros((b, 1)), with_rope=False)
+        ck, cv = cross_kv  # (B, enc_S, K, hd)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kt = jnp.repeat(ck, rep, axis=2)
+        vt = jnp.repeat(cv, rep, axis=2)
+        scale = 1.0 / jnp.sqrt(cfg.d_head).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, kt,
+                       preferred_element_type=jnp.float32)
+        w = jax.nn.softmax(s, axis=-1).astype(vt.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, vt)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.d_head) @ cross["attn"]["wo"]
+        x = x + active * o
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step. tokens: (B, 1); pos: scalar int (absolute position).
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = embed(params["embed"], tokens).astype(DTYPE)
+    period, n_units, active = _units(cfg)
+    active_arr = jnp.asarray(active, jnp.float32)
+
+    new_cache = dict(cache)
+    if cfg.first_dense_layers:
+        lead_caches = []
+        for lp, lc in zip(params["lead"], cache["lead"]):
+            x, nc = _block_decode(lp, x, cfg, "attn", lc, pos, 1.0)
+            lead_caches.append(nc)
+        new_cache["lead"] = lead_caches
+
+    is_encdec = cfg.family == "encdec"
+
+    def unit(carry, inp):
+        x = carry
+        if is_encdec:
+            slot_params, act, slot_caches, cross_p, cross_k, cross_v = inp
+        else:
+            slot_params, act, slot_caches = inp
+        new_slots = []
+        for j, kind in enumerate(cfg.block_pattern):
+            cross = None
+            cross_kv = None
+            if is_encdec and j == 0:
+                cross = cross_p
+                cross_kv = (cross_k, cross_v)
+            x, nc = _block_decode(
+                slot_params[j], x, cfg, kind, slot_caches[j], pos, act[j],
+                cross=cross, cross_kv=cross_kv,
+            )
+            new_slots.append(nc)
+        return x, tuple(new_slots)
+
+    if is_encdec:
+        xs = (params["slots"], active_arr, cache["slots"], params["cross"],
+              cache["cross_k"], cache["cross_v"])
+    else:
+        xs = (params["slots"], active_arr, cache["slots"])
+    x, new_slot_caches = jax.lax.scan(unit, x, xs)
+    new_cache["slots"] = new_slot_caches
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x) if cfg.tie_embeddings else x @ params["head"]
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int, *, img_embeds=None,
+            enc_frames=None):
+    """Process a prompt, building the decode cache.  Returns (logits, cache).
+
+    For attention blocks the produced K/V are written into the (max_len)
+    cache; recurrent/ssm blocks keep their final states.  (Implementation
+    runs block-by-block outside scan to keep heterogeneous cache plumbing
+    simple; the hot path for large-scale serving is decode_step.)
+    """
+    b, s = tokens.shape[0], tokens.shape[1]
+    x = embed(params["embed"], tokens).astype(DTYPE)
+    if cfg.family == "vlm" and img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(DTYPE), x], axis=1)
+        s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cache = init_cache(cfg, b, max_len)
+    period, n_units, active = _units(cfg)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, enc_frames)
+        from repro.models.layers import attn_qkv
+
+        eb, es, _ = enc_out.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(es)[None, :], (eb, es))
+        cks, cvs = [], []
+        for i in range(cfg.n_layers):
+            xp = jax.tree.map(lambda a: a[i], params["cross"])
+            _, ck, cv = attn_qkv(xp["attn"], enc_out, cfg, enc_pos, with_rope=False)
+            cks.append(ck)
+            cvs.append(cv)
+        cache["cross_k"] = jnp.stack(cks)
+        cache["cross_v"] = jnp.stack(cvs)
+
+    if cfg.first_dense_layers:
+        new_lead = []
+        for lp, lc in zip(params["lead"], cache["lead"]):
+            h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+            out, kv = _mix_apply(lp["mix"], h, cfg, "attn", positions=positions)
+            x = x + out
+            x = x + mlp(lp["ffn"], rmsnorm(lp["norm2"], x, cfg.norm_eps))
+            new_lead.append(_store_cache(cfg, "attn", lc, kv, s))
+        cache["lead"] = new_lead
+
+    new_slots = [jax.tree.map(lambda a: a, c) for c in cache["slots"]]
+    for u in range(n_units):
+        for j, kind in enumerate(cfg.block_pattern):
+            if not active[u][j]:
+                continue
+            lp = jax.tree.map(lambda a: a[u], params["slots"][j])
+            h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+            out, st = _mix_apply(lp["mix"], h, cfg, kind, positions=positions)
+            x = x + out
+            if kind != "ssd":
+                h2 = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                if kind == "moe":
+                    out2, _ = moe.moe_apply(lp["ffn"], h2, cfg)
+                else:
+                    out2 = mlp(lp["ffn"], h2)
+                x = x + out2
+            if cfg.family == "encdec":
+                from repro.models.layers import attn_qkv, chunked_attention
+
+                xp = jax.tree.map(lambda a: a[u], params["cross"])
+                hh = rmsnorm(xp["norm"], x, cfg.norm_eps)
+                q, _, _ = attn_qkv(xp["attn"], hh, cfg, positions, with_rope=False)
+                eb, es, _ = enc_out.shape
+                ck = cache["cross_k"][u]
+                cv = cache["cross_v"][u]
+                o = chunked_attention(q, ck, cv, causal=False)
+                o = o.reshape(b, s, cfg.n_heads * cfg.d_head) @ xp["attn"]["wo"]
+                x = x + o
+            slot_cache = jax.tree.map(lambda a: a[u], new_slots[j])
+            upd = _store_cache(cfg, kind, slot_cache, st, s)
+            new_slots[j] = jax.tree.map(
+                lambda full, one: full.at[u].set(one), new_slots[j], upd
+            )
+    cache["slots"] = tuple(new_slots)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x) if cfg.tie_embeddings else x @ params["head"]
+    return logits, cache
+
+
+def _store_kv(cfg, slot_cache, kv, s):
+    k, v = kv
+    if cfg.window > 0:
+        w = slot_cache["k"].shape[1]
+        k = k[:, -w:]
+        v = v[:, -w:]
+        start = 0 if s <= w else 0  # prompt ≤ window in our shapes
+        return {
+            "k": jax.lax.dynamic_update_slice_in_dim(slot_cache["k"], k, start, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(slot_cache["v"], v, start, 1),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(slot_cache["k"], k, 0, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(slot_cache["v"], v, 0, 1),
+    }
+
+
+def _store_cache(cfg, kind, slot_cache, st, s):
+    if kind in ("attn", "moe"):
+        if cfg.is_mla:
+            ckv, kpe = st
+            return {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(slot_cache["ckv"], ckv, 0, 1),
+                "kpe": jax.lax.dynamic_update_slice_in_dim(slot_cache["kpe"], kpe, 0, 1),
+            }
+        return _store_kv(cfg, slot_cache, st, s)
+    if kind == "rglru":
+        conv, rec = st
+        return {"conv": conv.astype(slot_cache["conv"].dtype), "rec": rec}
+    if kind == "ssd":
+        conv, ssm_state = st
+        return {"conv": conv.astype(slot_cache["conv"].dtype), "ssm": ssm_state}
+    raise ValueError(kind)

@@ -1,0 +1,104 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Queries and keys/values are low-rank compressed:
+  q:  x → c_q (q_lora_rank) → per-head [q_nope | q_rope]
+  kv: x → [c_kv (kv_lora_rank) | k_rope (shared single head)]
+      c_kv → per-head [k_nope | v]
+
+Train/prefill decompress and run the shared flash-pattern attention
+(qk dim = nope+rope, v dim = v_head_dim).  Decode runs the ABSORBED form:
+the cache stores only (c_kv, k_rope) — (kv_lora + rope) floats per token,
+57× smaller than materialized K/V at the 236B config — and scores are
+computed in the compressed space by absorbing W_UK into q and W_UV into
+the output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import chunked_attention, dense_init, rmsnorm, rmsnorm_init, rope, split_keys
+
+
+def mla_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    k1, k2, k3, k4, k5 = split_keys(key, 5)
+    return {
+        "wdq": dense_init(k1, (d, qr)),
+        "q_norm": rmsnorm_init(qr),
+        "wuq": dense_init(k2, (qr, h * (dn + dr))),
+        "wdkv": dense_init(k3, (d, kr + dr)),
+        "kv_norm": rmsnorm_init(kr),
+        "wukv": dense_init(k4, (kr, h * (dn + dv))),
+        "wo": dense_init(k5, (h * dv, d)),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm(p["q_norm"], x @ p["wdq"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, dn + dr)
+    qn, qr_ = q[..., :dn], q[..., dn:]
+    qr_ = rope(qr_, positions, cfg.rope_theta)
+    return qn, qr_
+
+
+def _compress_kv(p, x, cfg, positions):
+    kr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv_full = x @ p["wdkv"]  # (B, S, kr + dr)
+    ckv = rmsnorm(p["kv_norm"], ckv_full[..., :kr], cfg.norm_eps)
+    kpe = rope(ckv_full[..., kr:], positions, cfg.rope_theta)  # (B, S, dr)
+    return ckv, kpe
+
+
+def mla_apply(p, x, cfg, *, positions=None):
+    """Train/prefill (decompressed). Returns (out, (c_kv, k_rope)) cache."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    qn, qr_ = _project_q(p, x, cfg, positions)
+    ckv, kpe = _compress_kv(p, x, cfg, positions)
+    kv = (ckv @ p["wukv"]).reshape(b, s, h, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([qn, qr_], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kpe[:, :, None, :], (b, s, h, dr))], -1)
+    o = chunked_attention(q, k, v, causal=True)
+    o = o.reshape(b, s, h * dv)
+    return o @ p["wo"], (ckv, kpe)
+
+
+def mla_decode(p, x, cfg, cache_ckv, cache_kpe, pos):
+    """Absorbed single-token decode. cache_ckv: (B, S, kr); cache_kpe: (B, S, dr)."""
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    pos_arr = jnp.full((b, 1), pos)
+    qn, qr_ = _project_q(p, x, cfg, pos_arr)  # (B,1,H,dn),(B,1,H,dr)
+    ckv, kpe = _compress_kv(p, x, cfg, pos_arr)  # (B,1,kr),(B,1,dr)
+    cc = jax.lax.dynamic_update_slice_in_dim(cache_ckv, ckv, pos, axis=1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_kpe, kpe, pos, axis=1)
+
+    wuk = p["wukv"][:, : h * dn].reshape(kr, h, dn)
+    wuv = p["wukv"][:, h * dn :].reshape(kr, h, dv)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", qn, wuk)  # absorb W_UK
+    scale = 1.0 / jnp.sqrt(dn + dr).astype(jnp.float32)
+    # f32 queries: accumulate scores in f32 (and keeps the CPU thunk happy —
+    # XLA:CPU has no BF16×BF16→F32 dot)
+    s = jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(jnp.float32) * scale, cc,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhd,bsd->bhqs", qr_.astype(jnp.float32) * scale, ck,
+                       preferred_element_type=jnp.float32)
+    smax = cache_ckv.shape[1]
+    ok = jnp.arange(smax) <= pos
+    s = jnp.where(ok[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)  # f32
+    oc = jnp.einsum("bhqs,bsr->bqhr", w, cc, preferred_element_type=jnp.float32)
+    o = jnp.einsum("bqhr,rhd->bqhd", oc.astype(x.dtype), wuv)  # absorb W_UV
+    o = o.reshape(b, 1, h * dv)
+    return o @ p["wo"], cc, ck

@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The temporal-mixing block of the hybrid architecture: a gated linear
+recurrence  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)  with
+a_t = exp(−c·softplus(Λ)·r_t), whose gates r_t, i_t are block-diagonal
+projections of the (causal-conv'd) input.  Train/prefill evaluates the
+recurrence with an associative scan — O(log L) depth, the reason the
+hybrid family runs the long_500k shape — and decode is a constant-size
+state update (recurrence state + conv ring).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPE, dense_init, split_keys
+
+C_CONST = 8.0
+NUM_GATE_BLOCKS = 4
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    cw = cfg.conv1d_width
+    nb = NUM_GATE_BLOCKS
+    bs = w // nb
+    k1, k2, k3, k4, k5, k6 = split_keys(key, 6)
+    return {
+        "wx": dense_init(k1, (d, w)),
+        "wy": dense_init(k2, (d, w)),
+        "conv": dense_init(k3, (cw, w)),
+        "wr": dense_init(k4, (nb, bs, bs)),  # recurrence-gate (block diag)
+        "wi": dense_init(k5, (nb, bs, bs)),  # input-gate (block diag)
+        "lam": (jax.random.uniform(k6, (w,), jnp.float32) * 2.0 + 2.0),  # Λ
+        "wo": dense_init(jax.random.fold_in(key, 7), (w, d)),
+    }
+
+
+def _block_diag(p, x):
+    b, s, w = x.shape
+    nb = p.shape[0]
+    xb = x.reshape(b, s, nb, w // nb)
+    return jnp.einsum("bsnj,njk->bsnk", xb, p).reshape(b, s, w)
+
+
+def _causal_conv(conv, x, state=None):
+    """Depthwise causal conv. x: (B, S, W); state: (B, cw-1, W) history."""
+    cw = conv.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state
+    xp = jnp.concatenate([hist, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * conv[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1) :] if cw > 1 else hist
+    return out, new_state
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(_block_diag(p["wr"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p["wi"], xb).astype(jnp.float32))
+    log_a = -C_CONST * jax.nn.softplus(p["lam"]) * r  # (B, S, W) f32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * i * xb.astype(jnp.float32)
+
+
+def rglru_apply(p, x, cfg, *, conv_state=None, rec_state=None):
+    """Full-sequence apply. Returns (out, (conv_state, rec_state))."""
+    xb = x @ p["wx"]
+    yb = jax.nn.gelu(x @ p["wy"])
+    xb, conv_state_new = _causal_conv(p["conv"], xb, conv_state)
+    a, u = _gates(p, xb)
+    if rec_state is not None:  # fold carried state into step 0
+        u = u.at[:, 0].add(a[:, 0] * rec_state)
+    # associative linear recurrence: (a, u) ⊗ (a', u') = (a·a', a'·u + u')
+    def comb(l, r):
+        return l[0] * r[0], r[0] * l[1] + r[1]
+
+    _, h = jax.lax.associative_scan(comb, (a, u), axis=1)
+    rec_state_new = h[:, -1]
+    out = (h.astype(x.dtype) * yb) @ p["wo"]
+    return out, (conv_state_new, rec_state_new)
+
+
+def rglru_decode(p, x, cfg, conv_state, rec_state):
+    """Single-token decode. x: (B, 1, d); states carried."""
+    xb = x @ p["wx"]
+    yb = jax.nn.gelu(x @ p["wy"])
+    xb, conv_state = _causal_conv(p["conv"], xb, conv_state)
+    a, u = _gates(p, xb)  # (B, 1, W)
+    h = a[:, 0] * rec_state + u[:, 0]
+    out = (h[:, None].astype(x.dtype) * yb) @ p["wo"]
+    return out, (conv_state, h)

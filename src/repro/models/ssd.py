@@ -1,0 +1,180 @@
+"""Mamba-2 SSD block (state-space duality, chunked matmul form).
+
+The SSD algorithm evaluates the selective state-space recurrence as
+block matrices: within a chunk of Q tokens the token-token interaction is
+a (Q × Q) decay-masked "attention" (MXU matmuls); across chunks a single
+(H, P, N) state is carried by a short lax.scan (L/Q steps).  This is the
+paper-faithful duality — identical math to the sequential scan (tested),
+but arithmetic-intensity-friendly on the MXU, and decode is an O(1)
+state update, which is why the SSM family runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPE, dense_init, rmsnorm, rmsnorm_init, split_keys
+
+
+def ssd_dims(cfg):
+    din = cfg.ssm_expand * cfg.d_model
+    h = din // cfg.ssm_head_dim
+    return din, h, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+
+
+def ssd_init(key, cfg):
+    d = cfg.d_model
+    din, h, p_, g, n = ssd_dims(cfg)
+    cw = cfg.conv1d_width
+    k1, k2, k3, k4 = split_keys(key, 4)
+    return {
+        # in_proj → [z, x, B, C, dt]
+        "win": dense_init(k1, (d, 2 * din + 2 * g * n + h)),
+        "conv": dense_init(k2, (cw, din + 2 * g * n)),
+        "a_log": jnp.zeros((h,), jnp.float32) + jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(din),
+        "wout": dense_init(k3, (din, d)),
+    }
+
+
+def _split_in(p, x, cfg):
+    din, h, p_, g, n = ssd_dims(cfg)
+    zxbcdt = x @ p["win"]
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _conv(p, xbc, state=None):
+    cw = p["conv"].shape[0]
+    if state is None:
+        hist = jnp.zeros((xbc.shape[0], cw - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        hist = state
+    xp = jnp.concatenate([hist, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * p["conv"][i] for i in range(cw))
+    return jax.nn.silu(out), xp[:, -(cw - 1) :]
+
+
+def _segsum(dA):
+    """(..., Q) → (..., Q, Q) cumulative decay log-sums, causal-masked."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :] + dA[..., None, :] * 0.0
+    # decay from j→i (i ≥ j): sum dA over (j, i]; equals cs_i − cs_j
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(xh, dt, bmat, cmat, a_log, chunk):
+    """Chunked SSD core.
+
+    xh: (B, L, H, P); dt: (B, L, H) (post-softplus); bmat/cmat: (B, L, G, N).
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    b, l, h, p_ = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(chunk, l)
+    nc = l // q
+    assert l % q == 0, "sequence must be chunk-multiple (padded by caller)"
+    rep = h // g
+
+    xc = xh.reshape(b, nc, q, h, p_).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    bc = jnp.repeat(bmat.reshape(b, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(cmat.reshape(b, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+
+    a = -jnp.exp(a_log)  # (H,) negative decay rates
+    dA = dtc * a[None, None, None, :]  # (B, C, Q, H)
+    dA_cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+    dA_total = dA_cs[:, :, -1]  # (B, C, H)
+
+    # ---- intra-chunk (diagonal blocks): decay-masked QK-style matmul
+    seg = _segsum(dA.swapaxes(2, 3))  # (B, C, H, Q, Q) log decays
+    att = jnp.exp(seg)  # causal decay mask
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)  # C·B^T
+    y_diag = jnp.einsum(
+        "bchqk,bckh,bckhp->bcqhp", scores * att, dtc, xc
+    )
+
+    # ---- chunk states: contribution of each chunk to the carried state
+    decay_out = jnp.exp(dA_total[:, :, None, :] - dA_cs)  # (B, C, Q, H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn", bc, dtc, decay_out, xc)
+
+    # ---- inter-chunk recurrence over the carried state
+    def step(carry, inp):
+        st, dtot = inp  # (B, H, P, N), (B, H)
+        new = carry * jnp.exp(dtot)[:, :, None, None] + st
+        return new, carry  # emit PREVIOUS state for this chunk's off-diag
+
+    init = jnp.zeros((b, h, p_, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.swapaxes(0, 1), dA_total.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (B, C, H, P, N)
+
+    # ---- off-diagonal: previous state read out through C with in-chunk decay
+    decay_in = jnp.exp(dA_cs)  # (B, C, Q, H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cc, prev_states, decay_in)
+
+    y = (y_diag + y_off).reshape(b, l, h, p_)
+    return y, final
+
+
+def ssd_apply(p, x, cfg, *, conv_state=None, ssm_state=None):
+    """Full-sequence apply. Returns (out, (conv_state, ssm_state))."""
+    b, l, d = x.shape
+    din, h, p_, g, n = ssd_dims(cfg)
+    z, xbc, dt = _split_in(p, x, cfg)
+    xbc, conv_state_new = _conv(p, xbc, conv_state)
+    xh = xbc[..., :din].reshape(b, l, h, p_)
+    bmat = xbc[..., din : din + g * n].reshape(b, l, g, n)
+    cmat = xbc[..., din + g * n :].reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    # pad to chunk multiple
+    q = cfg.ssm_chunk
+    pad = (-l) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if ssm_state is not None:
+        # carried state folded in by prepending a virtual chunk is overkill
+        # for our use (train/prefill start from zero state); assert instead.
+        raise NotImplementedError("prefill continuation not required")
+    y, final = ssd_scan(xh, dt, bmat, cmat, p["a_log"], q)
+    y = y[:, :l]
+    y = y + p["d_skip"][None, None, :, None] * (
+        xbc[..., :din].reshape(b, l, h, p_).astype(jnp.float32)
+    )
+    y = y.reshape(b, l, din).astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["wout"], (conv_state_new, final)
+
+
+def ssd_decode(p, x, cfg, conv_state, ssm_state):
+    """Single-token decode: O(1) state update (the sequential recurrence)."""
+    b = x.shape[0]
+    din, h, p_, g, n = ssd_dims(cfg)
+    z, xbc, dt = _split_in(p, x, cfg)
+    xbc, conv_state = _conv(p, xbc, conv_state)
+    xh = xbc[..., :din].reshape(b, h, p_).astype(jnp.float32)
+    bmat = jnp.repeat(xbc[..., din : din + g * n].reshape(b, g, n), h // g, 1)
+    cmat = jnp.repeat(xbc[..., din + g * n :].reshape(b, g, n), h // g, 1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt1 * a[None, :])  # (B, H)
+    upd = jnp.einsum("bhn,bh,bhp->bhpn", bmat.astype(jnp.float32), dt1, xh)
+    new_state = ssm_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", cmat.astype(jnp.float32), new_state)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, din).astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["wout"], (conv_state, new_state)

@@ -1,0 +1,245 @@
+"""Columnar query evaluation over partitioned tables.
+
+Produces, for a query Q, the per-partition answers A_{g,i} (paper §2.4) —
+the quantity the whole system is built around: truth labels for picker
+training, per-partition contributions, and the weighted estimator all read
+from it.
+
+Two execution paths with identical semantics:
+  * a vectorized host path (numpy; used for training-data generation), and
+  * a jitted JAX path with static shapes (used by the AQP executor and as
+    the oracle for the `groupagg`/`predicate` Pallas kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.table import CATEGORICAL, Table
+from repro.queries.ir import Aggregate, Predicate, Query
+
+MAX_GROUPS = 4096  # generator guarantees radix product <= this
+
+
+# --------------------------------------------------------------------------
+# predicate evaluation
+# --------------------------------------------------------------------------
+def _clause_mask_np(table: Table, clause) -> np.ndarray:
+    col = table.columns[clause.col]
+    op, v = clause.op, clause.value
+    if op == "<":
+        return col < v
+    if op == "<=":
+        return col <= v
+    if op == ">":
+        return col > v
+    if op == ">=":
+        return col >= v
+    if op == "==":
+        return col == v
+    if op == "!=":
+        return col != v
+    if op == "in":
+        return np.isin(col, np.asarray(v))
+    raise ValueError(op)
+
+
+def predicate_mask(table: Table, predicate: Predicate) -> np.ndarray:
+    """(parts, rows) bool mask of rows passing the predicate."""
+    shape = (table.num_partitions, table.rows_per_partition)
+    mask = np.ones(shape, dtype=bool)
+    for group in predicate.groups:
+        gmask = np.zeros(shape, dtype=bool)
+        for clause in group.clauses:
+            gmask |= _clause_mask_np(table, clause)
+        mask &= gmask
+    return mask
+
+
+# --------------------------------------------------------------------------
+# group codes
+# --------------------------------------------------------------------------
+def group_radix(table: Table, groupby: tuple[str, ...]) -> int:
+    g = 1
+    for name in groupby:
+        g *= table.spec(name).cardinality
+    return g
+
+
+def group_codes(table: Table, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
+    """Mixed-radix combined group code per row; returns (codes, radix)."""
+    shape = (table.num_partitions, table.rows_per_partition)
+    codes = np.zeros(shape, dtype=np.int64)
+    radix = 1
+    for name in groupby:
+        spec = table.spec(name)
+        if spec.kind != CATEGORICAL:
+            raise ValueError(f"group-by on non-categorical column {name}")
+        codes = codes * spec.cardinality + table.columns[name].astype(np.int64)
+        radix *= spec.cardinality
+    if radix > MAX_GROUPS:
+        raise ValueError(f"group radix {radix} exceeds MAX_GROUPS")
+    return codes, radix
+
+
+# --------------------------------------------------------------------------
+# aggregate raw components
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _AggPlan:
+    """Each aggregate is finalized from raw segment sums.
+
+    raw component 0 is always the passing-row count.
+    """
+
+    kind: str
+    raw_index: int  # for sum/avg: index of the value-sum component
+
+
+def _projection(table: Table, agg: Aggregate) -> np.ndarray:
+    out = np.zeros((table.num_partitions, table.rows_per_partition), np.float64)
+    for coef, col in agg.terms:
+        out += coef * table.columns[col].astype(np.float64)
+    return out
+
+
+def plan_aggregates(aggregates: tuple[Aggregate, ...]):
+    plans: list[_AggPlan] = []
+    n_raw = 1  # component 0 = count
+    for agg in aggregates:
+        if agg.kind == "count":
+            plans.append(_AggPlan("count", 0))
+        else:
+            plans.append(_AggPlan(agg.kind, n_raw))
+            n_raw += 1
+    return plans, n_raw
+
+
+# --------------------------------------------------------------------------
+# per-partition answers
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PartitionAnswers:
+    """A_{g,i}: raw per-partition segment sums for the occupied groups."""
+
+    query: Query
+    group_keys: np.ndarray  # (G,) combined codes of occupied groups
+    raw: np.ndarray  # (N, G, n_raw) float64; [..., 0] = passing-row count
+    plans: list[_AggPlan]
+
+    @property
+    def num_partitions(self) -> int:
+        return self.raw.shape[0]
+
+    @property
+    def num_groups(self) -> int:
+        return self.raw.shape[1]
+
+    @property
+    def num_aggregates(self) -> int:
+        return len(self.plans)
+
+    def estimate(self, part_ids: np.ndarray, weights: np.ndarray) -> np.ndarray:
+        """Weighted estimate Ã_g (G, n_aggs); NaN marks a missed group."""
+        w = np.asarray(weights, np.float64)
+        raw = np.tensordot(w, self.raw[np.asarray(part_ids)], axes=(0, 0))  # (G, n_raw)
+        return self._finalize(raw)
+
+    def truth(self) -> np.ndarray:
+        return self._finalize(self.raw.sum(axis=0))
+
+    def _finalize(self, raw: np.ndarray) -> np.ndarray:
+        cnt = raw[:, 0]
+        out = np.zeros((raw.shape[0], len(self.plans)), np.float64)
+        for j, p in enumerate(self.plans):
+            if p.kind == "count":
+                out[:, j] = cnt
+            elif p.kind == "sum":
+                out[:, j] = raw[:, p.raw_index]
+            else:  # avg
+                with np.errstate(invalid="ignore", divide="ignore"):
+                    out[:, j] = raw[:, p.raw_index] / cnt
+        out[cnt <= 0] = np.nan  # group missed entirely
+        return out
+
+    def contribution(self) -> np.ndarray:
+        """Paper §4.3: max over groups & aggregates of A_{g,i}[j] / A_g[j]."""
+        total = self.raw.sum(axis=0)  # (G, n_raw)
+        safe = np.where(np.abs(total) > 1e-12, total, np.inf)
+        ratios = np.abs(self.raw) / np.abs(safe)  # (N, G, n_raw)
+        return ratios.max(axis=(1, 2)) if ratios.size else np.zeros(self.raw.shape[0])
+
+
+def per_partition_answers(table: Table, query: Query) -> PartitionAnswers:
+    mask = predicate_mask(table, query.predicate)
+    codes, radix = group_codes(table, query.groupby)
+    n, r = mask.shape
+    plans, n_raw = plan_aggregates(query.aggregates)
+
+    seg = (codes + np.arange(n, dtype=np.int64)[:, None] * radix).reshape(-1)
+    m = mask.reshape(-1)
+    raw = np.zeros((n * radix, n_raw), np.float64)
+    raw[:, 0] = np.bincount(seg, weights=m.astype(np.float64), minlength=n * radix)
+    k = 1
+    for agg in query.aggregates:
+        if agg.kind == "count":
+            continue
+        vals = (_projection(table, agg).reshape(-1)) * m
+        raw[:, k] = np.bincount(seg, weights=vals, minlength=n * radix)
+        k += 1
+    raw = raw.reshape(n, radix, n_raw)
+
+    occupied = np.flatnonzero(raw[:, :, 0].sum(axis=0) > 0)
+    return PartitionAnswers(query, occupied, raw[:, occupied, :], plans)
+
+
+# --------------------------------------------------------------------------
+# error metrics (§5.1.4)
+# --------------------------------------------------------------------------
+def error_metrics(truth: np.ndarray, estimate: np.ndarray) -> dict[str, float]:
+    """truth/estimate: (G, n_aggs) with NaN in estimate = missed group."""
+    if truth.size == 0:
+        return {"missed_groups": 0.0, "avg_rel_err": 0.0, "abs_over_true": 0.0}
+    missed = np.isnan(estimate[:, 0])
+    rel = np.ones_like(truth)
+    present = ~missed
+    t, e = truth[present], estimate[present]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        r = np.abs(e - t) / np.abs(t)
+    r = np.where(np.abs(t) < 1e-12, np.where(np.abs(e - t) < 1e-9, 0.0, 1.0), r)
+    rel[present] = np.minimum(np.nan_to_num(r, nan=1.0), 1.0)
+    abs_err = np.zeros_like(truth)
+    abs_err[present] = np.abs(e - t)
+    abs_err[missed] = np.abs(truth[missed])
+    denom = np.abs(truth).mean(axis=0)
+    denom = np.where(denom < 1e-12, 1.0, denom)
+    return {
+        "missed_groups": float(missed.mean()),
+        "avg_rel_err": float(rel.mean()),
+        "abs_over_true": float((abs_err.mean(axis=0) / denom).mean()),
+    }
+
+
+# --------------------------------------------------------------------------
+# JAX execution path (static shapes; oracle for the Pallas kernels)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("radix",))
+def masked_group_aggregate(
+    values: jax.Array,  # (rows, n_raw) raw components incl. the ones column
+    mask: jax.Array,  # (rows,) bool
+    codes: jax.Array,  # (rows,) int32 in [0, radix)
+    radix: int,
+) -> jax.Array:
+    """(radix, n_raw) masked segment sums — one partition's answers."""
+    vals = values * mask[:, None].astype(values.dtype)
+    return jax.ops.segment_sum(vals, codes, num_segments=radix)
+
+
+@jax.jit
+def clause_masks(col: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Range mask lo <= col < hi (canonical numeric clause form)."""
+    return (col >= lo) & (col < hi)

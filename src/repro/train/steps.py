@@ -1,0 +1,106 @@
+"""train_step / serve_step — the functions the dry-run lowers and the
+drivers execute.
+
+train_step: microbatched grad accumulation (lax.scan over microbatches;
+f32 accumulators sharded like params), remat around the whole loss
+(scan-over-layers inside is itself a checkpoint boundary), AdamW update,
+optional int8 error-feedback compressed cross-pod gradient reduction.
+
+serve_step: one decode token against the KV/state cache (the decode_32k /
+long_500k shapes); prefill_step: scan-based full-prompt forward used for
+prefill_32k (logits + per-layer cache emission via scan ys).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    num_microbatches: int = 1
+    remat: bool = True
+    compress_pod_grads: bool = False  # int8 EF all-reduce across "pod"
+    accum_dtype: str = "float32"  # microbatch grad accumulator ("bfloat16"
+    # halves the accumulator tree for ≥100B configs; <16 microbatches keeps
+    # the EMA error below Adam's own bf16-state noise floor)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig, topts: TrainOptions):
+    """Returns train_step(params, opt_state, batch) → (params, state, metrics)."""
+
+    if topts.remat:
+        lm.REMAT_UNITS = True  # unit-level remat inside the layer scan
+
+    def loss_fn(params, micro):
+        return lm.loss_fn(cfg, params, micro)
+
+    def grads_of(params, batch):
+        n = topts.num_microbatches
+        if n == 1:
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return l, aux, g
+
+        def micro_slice(i, leaf):
+            mb = leaf.shape[0] // n
+            return jax.lax.dynamic_slice_in_dim(leaf, i * mb, mb, axis=0)
+
+        adt = jnp.dtype(topts.accum_dtype)
+
+        def body(carry, i):
+            acc, lsum = carry
+            micro = jax.tree.map(partial(micro_slice, i), batch)
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, micro)
+            acc = jax.tree.map(lambda a, b: (a + b.astype(adt)).astype(adt), acc, g)
+            return (acc, lsum + l), aux
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+        (g, lsum), auxs = jax.lax.scan(body, (zeros, 0.0), jnp.arange(n))
+        g = jax.tree.map(lambda x: x / n, g)
+        aux = jax.tree.map(lambda x: x[-1], auxs)
+        return lsum / n, aux, g
+
+    def train_step(params, opt_state, batch):
+        l, aux, g = grads_of(params, batch)
+        if topts.compress_pod_grads:
+            from repro.distributed.compress import maybe_compressed_pod_mean
+
+            g = maybe_compressed_pod_mean(g)
+        params, opt_state, om = opt.apply_updates(ocfg, params, g, opt_state)
+        metrics = {"loss": l, **{k: v for k, v in aux.items()}, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens, pos) → (logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return lm.decode_step(cfg, params, cache, tokens, pos)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Full-prompt forward (logits; cache emission folded into HLO via the
+    same scanned blocks).  Used for the prefill_32k dry-run cells."""
+
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(
+            cfg,
+            params,
+            batch["tokens"],
+            img_embeds=batch.get("img_embeds"),
+            enc_frames=batch.get("enc_frames"),
+        )
+        return logits[:, -1]  # next-token logits for the batch
+
+    return prefill_step

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For every assigned arch: instantiate the REDUCED same-family config, run a
+forward + loss + grad step and a prefill→decode step on CPU, assert output
+shapes and finiteness.  The FULL configs are exercised via the dry-run only.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_archs, get_config, get_smoke
+from repro.models import lm
+from repro.models.config import SHAPES, applicable_shapes
+
+
+def _batch_for(cfg, b=2, s=32):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_img_tokens, cfg.d_model)) * 0.02, jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_positions, cfg.d_model)) * 0.02, jnp.bfloat16
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_forward_loss_grad(arch):
+    cfg = get_smoke(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    loss, metrics = lm.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    grads = jax.grad(lambda p: lm.loss_fn(cfg, p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(l, np.float32))) for l in leaves), (
+        f"{arch}: non-finite grads"
+    )
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_logit_shapes(arch):
+    cfg = get_smoke(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch_for(cfg, b=2, s=16)
+    logits, _ = lm.forward(
+        cfg, params, batch["tokens"],
+        img_embeds=batch.get("img_embeds"), enc_frames=batch.get("enc_frames"),
+    )
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_prefill_decode(arch):
+    cfg = get_smoke(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(2))
+    b, s, max_len = 2, 8, 24
+    batch = _batch_for(cfg, b=b, s=s)
+    logits, cache = lm.prefill(
+        cfg, params, batch["tokens"], max_len,
+        img_embeds=batch.get("img_embeds"), enc_frames=batch.get("enc_frames"),
+    )
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    pos = s + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    for step in range(3):
+        logits, cache = lm.decode_step(cfg, params, cache, tok, pos + step)
+        assert logits.shape == (b, 1, cfg.vocab)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_decode_matches_forward(arch):
+    """Greedy next-token from (prefill + decode) == from full forward."""
+    cfg = get_smoke(arch)
+    if cfg.family == "encdec":
+        pytest.skip("cross-attn prefill path validated separately")
+    params = lm.init_params(cfg, jax.random.PRNGKey(3))
+    b, s = 1, 12
+    batch = _batch_for(cfg, b=b, s=s)
+    full_logits, _ = lm.forward(
+        cfg, params, batch["tokens"], img_embeds=batch.get("img_embeds"),
+    )
+    pf_logits, _ = lm.prefill(
+        cfg, params, batch["tokens"], 32, img_embeds=batch.get("img_embeds"),
+    )
+    if cfg.family == "vlm":
+        pf_logits = pf_logits[:, cfg.n_img_tokens:]
+    a = np.asarray(full_logits[:, -1], np.float32)
+    b = np.asarray(pf_logits[:, -1], np.float32)
+    # hybrid recurrence accumulates bf16 gate noise across layers: wider atol
+    atol = 0.15 if cfg.family == "hybrid" else 5e-2
+    np.testing.assert_allclose(a, b, rtol=5e-2, atol=atol)
+    assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.999
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_full_config_numbers(arch):
+    """The full configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "mixtral_8x22b": (56, 6144, 48, 8, 32768),
+        "deepseek_v2_236b": (60, 5120, 128, 128, 102400),
+        "llama3_405b": (126, 16384, 128, 8, 128256),
+        "yi_9b": (48, 4096, 32, 4, 64000),
+        "yi_6b": (32, 4096, 32, 4, 64000),
+        "qwen1_5_0_5b": (24, 1024, 16, 16, 151936),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 256000),
+        "whisper_small": (12, 768, 12, 12, 51865),
+        "mamba2_130m": (24, 768, 1, 1, 50280),
+        "internvl2_26b": (48, 6144, 48, 8, 92553),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.vocab)
+    assert got == expected
+
+
+def test_param_counts_plausible():
+    """Sanity on 6ND inputs: llama3 ≈ 405B, mixtral ≈ 141B total/39B active."""
+    l3 = get_config("llama3_405b").param_count()
+    assert 3.8e11 < l3 < 4.3e11, l3
+    mx = get_config("mixtral_8x22b")
+    assert 1.2e11 < mx.param_count() < 1.6e11, mx.param_count()
+    assert 3.2e10 < mx.active_param_count() < 4.5e10, mx.active_param_count()
+    ds = get_config("deepseek_v2_236b")
+    assert 1.9e11 < ds.param_count() < 2.7e11, ds.param_count()
+    assert 1.4e10 < ds.active_param_count() < 2.9e10, ds.active_param_count()
+
+
+def test_long_context_applicability():
+    """long_500k only for sub-quadratic archs (DESIGN §Arch-applicability)."""
+    runs = {a: "long_500k" in applicable_shapes(get_config(a)) for a in all_archs()}
+    assert runs["mamba2_130m"] and runs["recurrentgemma_9b"] and runs["mixtral_8x22b"]
+    for a in ("llama3_405b", "yi_9b", "yi_6b", "qwen1_5_0_5b", "deepseek_v2_236b",
+              "whisper_small", "internvl2_26b"):
+        assert not runs[a], a

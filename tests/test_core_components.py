@@ -1,0 +1,225 @@
+"""Unit + property tests for the PS³ core (paper §3–§4 mechanics).
+
+Seeded randomized sweeps stand in for hypothesis (not installed here);
+each property is exercised over many generated cases.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.clustering import (
+    hac_fit,
+    kmeans_fit,
+    kmeans_select,
+    select_exemplars,
+)
+from repro.core.features import FeatureBuilder
+from repro.core.funnel import allocate, make_labels, pick_thresholds
+from repro.core.gbdt import fit_gbdt, forest_predict_jnp
+from repro.core.outliers import find_outliers
+from repro.core.sketches import build_sketches, lossy_counting, sketch_storage_bytes
+from repro.data.datasets import make_dataset
+from repro.queries.engine import error_metrics, per_partition_answers
+from repro.queries.generator import WorkloadSpec
+
+
+@pytest.fixture(scope="module")
+def small_table():
+    return make_dataset("aria", num_partitions=32, rows_per_partition=512)
+
+
+@pytest.fixture(scope="module")
+def fb(small_table):
+    return FeatureBuilder(small_table, build_sketches(small_table))
+
+
+# --------------------------------------------------------------------------
+# sketches
+# --------------------------------------------------------------------------
+def test_measures_match_exact(small_table):
+    sk = build_sketches(small_table)
+    col = small_table.columns["olsize"]
+    m = sk.columns["olsize"].measures
+    np.testing.assert_allclose(m[:, 0], col.mean(axis=1), rtol=1e-6)
+    np.testing.assert_allclose(m[:, 1], col.min(axis=1), rtol=1e-6)
+    np.testing.assert_allclose(m[:, 2], col.max(axis=1), rtol=1e-6)
+    np.testing.assert_allclose(m[:, 4], col.std(axis=1), rtol=1e-5)
+
+
+def test_akmv_ndv_accuracy(small_table):
+    """AKMV distinct-count estimate within 25% for card ≫ k (property)."""
+    sk = build_sketches(small_table)
+    for name in ("TenantId", "AppInfo_Version"):
+        est = sk.columns[name].ndv
+        true = np.asarray(
+            [len(np.unique(r)) for r in small_table.columns[name]], np.float64
+        )
+        rel = np.abs(est - true) / true
+        assert rel.mean() < 0.25, (name, rel.mean())
+
+
+def test_exact_hh_vs_lossy_counting():
+    """Exact thresholded frequencies ⊇ lossy-counting output (DESIGN §3)."""
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        stream = rng.choice(50, size=4000, p=np.random.default_rng(trial)
+                            .dirichlet(np.ones(50) * 0.3))
+        lc = lossy_counting(stream, support=0.01)
+        counts = np.bincount(stream, minlength=50) / len(stream)
+        exact = {int(i): counts[i] for i in np.flatnonzero(counts >= 0.01)}
+        # every true heavy hitter must be reported by both
+        for k in exact:
+            assert k in lc, (trial, k)
+
+
+def test_storage_under_paper_budget(small_table):
+    sk = build_sketches(small_table)
+    kb = sketch_storage_bytes(small_table, sk)
+    assert kb["total_kb"] < 110.0  # paper Table 4: ≤ ~103KB/partition
+
+
+# --------------------------------------------------------------------------
+# selectivity (admissibility property — perfect recall)
+# --------------------------------------------------------------------------
+def test_selectivity_upper_perfect_recall(small_table, fb):
+    from repro.queries.engine import predicate_mask
+
+    wl = WorkloadSpec(small_table, seed=7)
+    for q in wl.sample_workload(40):
+        sel = fb.selectivity(q)
+        mask = predicate_mask(small_table, q.predicate)
+        true_frac = mask.mean(axis=1)
+        # upper bound admissible: sel_upper ≥ true fraction (up to fp eps)
+        assert np.all(sel[:, 0] >= true_frac - 1e-6), q.describe()
+        # and the filter never drops a partition with passing rows
+        assert not np.any((sel[:, 0] <= 0) & (true_frac > 0))
+
+
+# --------------------------------------------------------------------------
+# estimator identities
+# --------------------------------------------------------------------------
+def test_full_budget_exact(small_table):
+    wl = WorkloadSpec(small_table, seed=3)
+    n = small_table.num_partitions
+    for q in wl.sample_workload(15):
+        a = per_partition_answers(small_table, q)
+        est = a.estimate(np.arange(n), np.ones(n))
+        truth = a.truth()
+        ok = np.isfinite(truth)
+        np.testing.assert_allclose(est[ok], truth[ok], rtol=1e-9, atol=1e-9)
+
+
+def test_error_metrics_zero_on_exact(small_table):
+    q = WorkloadSpec(small_table, seed=5).sample_workload(5)[2]
+    a = per_partition_answers(small_table, q)
+    m = error_metrics(a.truth(), a.truth())
+    assert m["missed_groups"] == 0 and m["avg_rel_err"] == 0
+
+
+# --------------------------------------------------------------------------
+# gbdt
+# --------------------------------------------------------------------------
+def test_gbdt_fits_nonlinear():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(8000, 12))
+    y = np.where(x[:, 0] > 0, 3.0, -1.0) + x[:, 1] * x[:, 1]
+    f = fit_gbdt(x[:6000], y[:6000], num_trees=40, depth=4)
+    pred = f.predict(x[6000:])
+    r2 = 1 - np.var(y[6000:] - pred) / np.var(y[6000:])
+    assert r2 > 0.9, r2
+
+
+def test_gbdt_jnp_predict_parity():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(2000, 6))
+    y = x @ rng.normal(size=6) + np.sin(x[:, 0] * 3)
+    f = fit_gbdt(x, y, num_trees=20, depth=4)
+    pj = forest_predict_jnp(*f.as_jnp(), jnp.asarray(x, jnp.float32),
+                            f.depth, f.base, f.learning_rate)
+    np.testing.assert_allclose(np.asarray(pj), f.predict(x), atol=1e-4)
+
+
+def test_gbdt_rowsample_still_learns():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(6000, 8))
+    y = 2 * x[:, 0] - x[:, 3]
+    f = fit_gbdt(x, y, num_trees=40, depth=4, rowsample=0.4, colsample=0.6)
+    r2 = 1 - np.var(y - f.predict(x)) / np.var(y)
+    assert r2 > 0.8, r2
+
+
+# --------------------------------------------------------------------------
+# clustering
+# --------------------------------------------------------------------------
+def test_kmeans_separates_blobs():
+    rng = np.random.default_rng(4)
+    blobs = np.concatenate(
+        [rng.normal(loc=c, scale=0.05, size=(30, 4)) for c in (0.0, 1.0, 2.0)]
+    )
+    _, assign = kmeans_fit(jnp.asarray(blobs, jnp.float32), 3)
+    assign = np.asarray(assign)
+    for i in range(3):
+        seg = assign[i * 30 : (i + 1) * 30]
+        assert len(np.unique(seg)) == 1  # each blob in one cluster
+
+
+def test_exemplar_weights_sum_to_n():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(100, 8)).astype(np.float32)
+    for k in (3, 10, 25):
+        ids, w = kmeans_select(x, k)
+        assert w.sum() == 100
+        assert len(np.unique(ids)) == len(ids)
+
+
+def test_hac_matches_kmeans_quality():
+    rng = np.random.default_rng(6)
+    x = np.concatenate(
+        [rng.normal(loc=i, scale=0.1, size=(20, 3)) for i in range(4)]
+    ).astype(np.float32)
+    a = hac_fit(x, 4, "ward")
+    assert len(np.unique(a)) == 4
+    for i in range(4):
+        assert len(np.unique(a[i * 20 : (i + 1) * 20])) == 1
+
+
+# --------------------------------------------------------------------------
+# funnel / allocation / outliers
+# --------------------------------------------------------------------------
+def test_labels_positive_rescale():
+    c = np.zeros(100)
+    c[:4] = 0.9
+    y, pos = make_labels(c, 0.5)
+    assert pos.sum() == 4
+    np.testing.assert_allclose(y[:4], np.sqrt(100 / 4))
+
+
+def test_thresholds_monotone():
+    rng = np.random.default_rng(7)
+    contribs = [np.abs(rng.normal(size=200)) * (rng.random(200) < 0.4)
+                for _ in range(10)]
+    t = pick_thresholds(contribs, 4)
+    assert np.all(np.diff(t) >= 0)
+
+
+def test_allocate_respects_budget_and_decay():
+    sizes = [100, 50, 20, 8, 2]
+    out = allocate(sizes, 40, alpha=2.0)
+    assert sum(out) == 40
+    assert all(0 <= o <= s for o, s in zip(out, sizes))
+    # most-important group (last) gets the highest sampling rate
+    rates = [o / s for o, s in zip(out, sizes) if s > 0]
+    assert rates[-1] == max(rates)
+
+
+def test_allocate_caps_at_group_size():
+    assert allocate([3, 3], 10, 2.0) == [3, 3]
+
+
+def test_outlier_detection_rare_bitmap_groups():
+    bitmaps = np.zeros((60, 5))
+    bitmaps[:50, 0] = 1  # one big group
+    bitmaps[50:57, 1] = 1  # medium-rare (7 < 10 and < 10% of 50? 7 > 5 → no)
+    bitmaps[57:, 2] = 1  # rare (3 partitions)
+    ids = find_outliers(np.arange(60), bitmaps, max_outliers=10)
+    assert set(ids) == set(range(57, 60))

@@ -1,0 +1,163 @@
+"""Distribution-layer tests: sharding rules, compressed all-reduce, and the
+dry-run code path itself on a reduced fake-device mesh (subprocess, so the
+512-device XLA flag never leaks into this test process).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_spec_rules_basics():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # expert stack (stacked): (U, E, d, ff) → (None, M, F→None, None)
+    s = sharding.spec_for_path("slots/0/ffn/wi", (4, 8, 64, 128), mesh, stacked=True)
+    assert s == P(None, "model", None, None)
+    # dense mlp (stacked): (U, d, ff) → (None, F→None, M)
+    s = sharding.spec_for_path("slots/0/ffn/wi", (4, 64, 128), mesh, stacked=True)
+    assert s == P(None, None, "model")
+    # rglru gate (nb, bs, bs)
+    s = sharding.spec_for_path("slots/0/mix/wi", (4, 4, 32, 32), mesh, stacked=True)
+    assert s == P(None, None, None, "model")
+    # embed
+    s = sharding.spec_for_path("embed/table", (1024, 64), mesh, stacked=False)
+    assert s == P("model", None)
+
+
+def test_indivisible_dims_fall_back_to_replication():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # simulate model axis size 1 → everything divides; use rank logic only
+    s = sharding.spec_for_path("head", (63, 127), mesh, stacked=False)
+    assert s == P(None, "model") or s == P("data", "model")  # data absent → None
+
+
+def test_param_shardings_cover_all_archs():
+    """Every param leaf of every smoke arch resolves to a valid spec."""
+    from repro.configs import all_archs, get_smoke
+    from repro.models import lm
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    for arch in all_archs():
+        cfg = get_smoke(arch)
+        shapes = lm.param_shapes(cfg)
+        sh = sharding.param_shardings(shapes, mesh)
+        assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(shapes))
+
+
+_SUBPROC_COMPRESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp, json
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compress import compressed_pod_mean
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.normal(size=(64, 32)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(130,)), jnp.float32)}
+    e = jax.tree.map(jnp.zeros_like, g)
+    with mesh:
+        out, err = jax.jit(lambda ge: compressed_pod_mean(ge[0], mesh, ge[1]))((g, e))
+    # pod axis holds identical replicas here => mean == input (within int8 quant)
+    rel = max(float(jnp.max(jnp.abs(out[k] - g[k])) / (jnp.max(jnp.abs(g[k])) + 1e-9))
+              for k in g)
+    print(json.dumps({"rel": rel}))
+""")
+
+
+def test_compressed_psum_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROC_COMPRESS],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    rel = json.loads(r.stdout.strip().splitlines()[-1])["rel"]
+    assert rel < 0.02, rel  # int8 quantization error bound
+
+
+_SUBPROC_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, jax
+    import repro.launch.dryrun as dr
+    import repro.launch.mesh as mesh_mod
+    # shrink the production mesh for the test (same code path)
+    mesh_mod.make_production_mesh = lambda multi_pod=False: mesh_mod.make_mesh(
+        (2, 2, 2) if multi_pod else (4, 2),
+        ("pod", "data", "model") if multi_pod else ("data", "model"))
+    dr.make_production_mesh = mesh_mod.make_production_mesh
+    from repro.configs import get_smoke
+    import repro.configs as C
+    real_get = C.get_config
+    dr.get_config = lambda a: get_smoke(a)
+    cell = dr.lower_cell("mixtral_8x22b", "train_4k", False, verbose=False)
+    cell2 = dr.lower_cell("mixtral_8x22b", "decode_32k", True, verbose=False)
+    print(json.dumps({
+        "flops": cell["cost"]["flops"],
+        "colls": cell["collectives"]["num_collectives"],
+        "flops2": cell2["cost"]["flops"],
+    }))
+""")
+
+
+def test_dryrun_code_path_reduced_mesh():
+    """The exact dry-run path (lower+compile+analyze) on 8 fake devices."""
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROC_DRYRUN],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["flops"] > 0 and out["flops2"] > 0
+    assert out["colls"] > 0  # sharded train step must communicate
+
+
+def test_hlo_stats_trip_count_math():
+    from repro.launch import hlo_stats
+
+    txt = """
+HloModule test
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %g = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,128]{1,0} all-reduce(%g), replica_groups=[2,4]<=[8], to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %ar)
+}
+
+%cond (p2: (s32[], f32[8,128])) -> pred[] {
+  %p2 = (s32[], f32[8,128]) parameter(0)
+  ROOT %lt = pred[] compare(%p2, %p2), direction=LT
+}
+
+ENTRY %main (x: f32[8,128]) -> f32[8,128] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %init = (s32[], f32[8,128]) tuple(%d, %x)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    r = hlo_stats.analyze(txt, 8)
+    # dot: 2 * 8*8 * 128 = 16384 flops, once
+    assert r["flops"] == 2 * 8 * 8 * 128
+    # all-reduce: 8*128*4 bytes * 2 * (3/4) ring, × trip 5
+    expected = 8 * 128 * 4 * 2 * (3 / 4) * 5
+    assert abs(r["link_bytes_total"] - expected) < 1e-6, r["link_bytes_total"]

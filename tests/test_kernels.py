@@ -1,0 +1,115 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode).
+
+Shapes sweep odd/aligned sizes in both tile dimensions; dtypes sweep
+float32/bfloat16 inputs (accumulation is always f32).  Seeded randomized
+property sweeps stand in for hypothesis (not installed in this image).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES_PR = [(1, 128), (3, 100), (4, 1024), (7, 2050), (2, 4096)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape) * 3 + 1.5, dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES_PR)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_moments_matches_ref(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = jnp.abs(_rand(rng, shape, dtype)) + 0.1  # positive (log-path live)
+    got = ops.moments_op(x)
+    want = ref.moments_ref(x)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES_PR)
+def test_moments_handles_negatives(shape):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, shape, jnp.float32)  # mixed sign: log paths still defined
+    got = ops.moments_op(x)
+    want = ref.moments_ref(x)
+    np.testing.assert_allclose(got[:, :4], want[:, :4], rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES_PR)
+@pytest.mark.parametrize("nb", [4, 10, 33])
+def test_histogram_range_matches_ref(shape, nb):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    qs = np.linspace(0, 1, nb + 1)
+    edges = jnp.asarray(np.quantile(np.asarray(x), qs, axis=1).T, jnp.float32)
+    got = ops.histogram_range_op(x, edges)
+    want = ref.histogram_range_ref(x, edges)
+    np.testing.assert_allclose(got, want, atol=0)
+    # every in-range row lands in exactly one bucket
+    np.testing.assert_allclose(np.asarray(got).sum(1), shape[1])
+
+
+@pytest.mark.parametrize("shape", SHAPES_PR)
+@pytest.mark.parametrize("card", [2, 17, 130])
+def test_bincount_matches_ref(shape, card):
+    rng = np.random.default_rng(2)
+    codes = jnp.asarray(rng.integers(0, card, size=shape), jnp.int32)
+    got = ops.bincount_op(codes, card)
+    want = ref.bincount_ref(codes, card)
+    np.testing.assert_allclose(got, want, atol=0)
+    for i in range(shape[0]):
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.bincount(np.asarray(codes[i]), minlength=card)
+        )
+
+
+@pytest.mark.parametrize("n,k,f", [(16, 4, 8), (100, 13, 37), (256, 128, 130), (33, 5, 300)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pdist_matches_ref(n, k, f, dtype):
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (n, f), dtype)
+    c = _rand(rng, (k, f), dtype)
+    got = ops.pdist_sq_op(x, c)
+    want = ref.pdist_sq_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-1 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@pytest.mark.parametrize("p,v,r,g", [(2, 1, 256, 4), (3, 4, 1000, 37), (1, 3, 2048, 600)])
+def test_group_aggregate_matches_ref(p, v, r, g):
+    rng = np.random.default_rng(4)
+    values = jnp.asarray(rng.normal(size=(p, v, r)), jnp.float32)
+    mask = jnp.asarray(rng.random((p, r)) < 0.6)
+    codes = jnp.asarray(rng.integers(0, g, size=(p, r)), jnp.int32)
+    got = ops.group_aggregate_op(values, mask, codes, g)
+    want = ref.group_aggregate_ref(values, mask, codes, g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("p,c,r,g", [(2, 1, 300, 1), (3, 5, 1024, 2), (1, 8, 513, 4)])
+def test_predicate_matches_ref(p, c, r, g):
+    rng = np.random.default_rng(5)
+    cols = jnp.asarray(rng.normal(size=(p, c, r)), jnp.float32)
+    lo = jnp.asarray(rng.normal(size=(c,)) - 0.5, jnp.float32)
+    hi = lo + jnp.asarray(np.abs(rng.normal(size=(c,))) + 0.2, jnp.float32)
+    gid = rng.integers(0, g, size=c)
+    gid[:g] = np.arange(g)  # every group non-empty
+    gmap = jnp.asarray(np.eye(g)[gid], jnp.float32)
+    mask, cnt = ops.predicate_eval_op(cols, lo, hi, gmap, g)
+    rmask, rcnt = ref.predicate_eval_ref(cols, lo, hi, gmap)
+    np.testing.assert_allclose(mask, rmask, atol=0)
+    np.testing.assert_allclose(cnt, rcnt, atol=0)
+
+
+def test_group_aggregate_full_budget_identity():
+    """Σ_g out[:, 0, g] == passing-row count (estimator wiring property)."""
+    rng = np.random.default_rng(6)
+    p, r, g = 4, 512, 16
+    values = jnp.ones((p, 1, r), jnp.float32)
+    mask = jnp.asarray(rng.random((p, r)) < 0.5)
+    codes = jnp.asarray(rng.integers(0, g, size=(p, r)), jnp.int32)
+    out = ops.group_aggregate_op(values, mask, codes, g)
+    np.testing.assert_allclose(np.asarray(out).sum(-1)[:, 0], np.asarray(mask).sum(-1))

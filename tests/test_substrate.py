@@ -1,0 +1,167 @@
+"""Substrate tests: optimizer dtypes, checkpoint fault tolerance + elastic
+restore, PS³ token data plane (incl. straggler substitution), train loop.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.tokens import PS3DataPlane, make_token_store, mixture_query
+from repro.train import optimizer as opt
+from repro.train.checkpoint import Checkpointer
+
+
+def _toy_params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "slots": ({"w": jax.random.normal(k, (6, 16, 32), jnp.bfloat16)},),
+        "head": jax.random.normal(k, (16, 8), jnp.bfloat16),
+    }
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_descends(dtype):
+    cfg = opt.AdamWConfig(peak_lr=0.1, warmup_steps=1, total_steps=50,
+                          weight_decay=0.0, state_dtype=dtype)
+    params = {"w": jnp.asarray([2.0, -3.0, 1.0])}
+    state = opt.init_state(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.apply_updates(cfg, params, g, state)
+    assert float(loss(params)) < 0.05, (dtype, float(loss(params)))
+
+
+def test_int8_state_roundtrip_accuracy():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 256)), jnp.float32)
+    q, s = opt._q8_encode(x)
+    back = opt._q8_decode(q, s, x.shape)
+    rel = np.abs(np.asarray(back) - np.asarray(x)).max() / np.abs(x).max()
+    assert rel < 0.02
+
+
+def test_int8_states_same_shape_as_param():
+    """Shape-preserving quantization: q/scale inherit the param sharding."""
+    cfg = opt.AdamWConfig(state_dtype="int8")
+    params = _toy_params()
+    state = opt.init_state(cfg, params)
+    q, s = state["m"]["slots"][0]["w"]
+    assert q.shape == (6, 16, 32) and s.shape == (6, 16, 1)
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    tree = _toy_params()
+    ck.save(5, {"params": tree})
+    got = ck.restore(5, {"params": tree})
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves({"params": tree})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_last_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A torn tmp dir (simulated crash mid-save) is never listed."""
+    ck = Checkpointer(str(tmp_path), keep_last=3)
+    ck.save(1, {"x": jnp.ones(4)})
+    torn = tmp_path / "step_99"
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"garbage")  # no manifest => ignored
+    assert ck.all_steps() == [1]
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, {"x": jnp.arange(10)}, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Save unsharded, restore onto a 1-device mesh sharding (elasticity)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(1, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    got = ck.restore(1, tree, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+# --------------------------------------------------------------------------
+# PS³ token data plane
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def plane():
+    store = make_token_store(n_shards=32, seqs_per_shard=32, seq_len=33,
+                             vocab=128, seed=1)
+    return PS3DataPlane(store, budget_frac=0.3, num_train_queries=12, seed=1)
+
+
+def test_data_plane_mixture_beats_naive_subset(plane):
+    """PS³-weighted mixture estimate ≈ truth on covered domains."""
+    est, truth = plane.mixture_estimate()
+    covered = np.isfinite(est[:, 0])
+    assert covered.mean() > 0.55
+    rel = np.abs(est[covered] - truth[covered]) / np.maximum(truth[covered], 1)
+    assert rel.mean() < 0.5
+
+
+def test_data_plane_batches_shapes(plane):
+    for batch in plane.batches(8, 3, seed=0):
+        assert batch["tokens"].shape == (8, 32)
+        assert batch["targets"].shape == (8, 32)
+        assert batch["loss_weights"].shape == (8,)
+        assert np.all(batch["loss_weights"] > 0)
+        break
+
+
+def test_straggler_substitution(plane):
+    victim = int(plane.shard_ids[0])
+    repl = plane.substitute(victim)
+    assert repl != victim
+    assert victim not in plane.shard_ids or victim in plane.dead
+    # weights unchanged in total (estimator consistency)
+    assert plane.weights.sum() > 0
+
+
+# --------------------------------------------------------------------------
+# end-to-end train loop (crash + resume determinism)
+# --------------------------------------------------------------------------
+def test_train_resume_matches_uninterrupted(tmp_path):
+    from repro.launch.train import main as train_main
+
+    a = train_main([
+        "--arch", "mamba2-130m", "--smoke", "--steps", "8", "--batch", "4",
+        "--ckpt-dir", str(tmp_path / "a"), "--ckpt-every", "4",
+    ])
+    # crash after 4 steps: run to 4, then resume to 8 in a new process-like call
+    b1 = train_main([
+        "--arch", "mamba2-130m", "--smoke", "--steps", "4", "--batch", "4",
+        "--ckpt-dir", str(tmp_path / "b"), "--ckpt-every", "4",
+    ])
+    b2 = train_main([
+        "--arch", "mamba2-130m", "--smoke", "--steps", "8", "--batch", "4",
+        "--ckpt-dir", str(tmp_path / "b"), "--ckpt-every", "4", "--resume",
+    ])
+    # the resumed tail reproduces the uninterrupted run's losses
+    np.testing.assert_allclose(b2[-1], a[-1], rtol=2e-2, atol=2e-2)
