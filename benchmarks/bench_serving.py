@@ -1,0 +1,79 @@
+"""Serving-engine benchmark: batched picks/sec vs the single-query path,
+plus the jit compile census (shape buckets) — the perf-regression canary
+for the pad-and-bucket clustering kernels.
+
+Reports, per dataset:
+  * single-path picks/sec (cold incl. compiles, then warm steady state),
+  * batched picks/sec through `BatchPicker` (cold / warm),
+  * compile counts for each phase and the final shape-bucket census —
+    if bucketing regresses, `compiles_*` blows up toward the pick count.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import get_context, write_result
+from repro.core import clustering
+from repro.queries.generator import WorkloadSpec
+from repro.serving import BatchPicker
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+def _time_single(picker, queries, budget):
+    t0 = time.perf_counter()
+    for q in queries:
+        picker.pick(q, budget)
+    return len(queries) / (time.perf_counter() - t0)
+
+
+def run(datasets=("tpch", "aria"), n_queries=None, budget_frac=0.1):
+    n_queries = n_queries or (24 if QUICK else 64)
+    out = {}
+    for ds in datasets:
+        ctx = get_context(ds)
+        n = ctx.table.num_partitions
+        budget = max(1, int(budget_frac * n))
+        queries = WorkloadSpec(ctx.table, seed=4242).sample_workload(n_queries)
+
+        # ---- single-query path
+        clustering.reset_trace_counts()
+        single_cold = _time_single(ctx.art.picker, queries, budget)
+        compiles_single = clustering.total_traces()
+        single_warm = _time_single(ctx.art.picker, queries, budget)
+
+        # ---- batched path
+        clustering.reset_trace_counts()
+        bp = BatchPicker(ctx.art.picker)
+        t0 = time.perf_counter()
+        bp.pick_batch(queries, budget)
+        batched_cold = n_queries / (time.perf_counter() - t0)
+        compiles_batched = clustering.total_traces()
+        t0 = time.perf_counter()
+        bp.pick_batch(queries, budget)
+        batched_warm = n_queries / (time.perf_counter() - t0)
+
+        stats = bp.serve_stats()
+        out[ds] = {
+            "queries": n_queries,
+            "budget": budget,
+            "single_picks_per_sec_cold": float(single_cold),
+            "single_picks_per_sec_warm": float(single_warm),
+            "batched_picks_per_sec_cold": float(batched_cold),
+            "batched_picks_per_sec_warm": float(batched_warm),
+            "compiles_single_path": int(compiles_single),
+            "compiles_batched_path": int(compiles_batched),
+            "shape_buckets": int(stats["shape_buckets"]),
+        }
+        print(
+            f"[bench_serving:{ds}] single {single_warm:.1f}/s "
+            f"batched {batched_warm:.1f}/s (cold {batched_cold:.1f}/s, "
+            f"{compiles_batched} compiles over {n_queries} picks)"
+        )
+    write_result("bench_serving", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -21,19 +21,22 @@ from repro.core.features import FeatureBuilder
 from repro.core.picker import PickerConfig, TrainedArtifacts, train_picker
 from repro.core.sketches import build_sketches
 from repro.data.datasets import make_dataset
-from repro.queries.engine import PartitionAnswers, error_metrics, per_partition_answers
+from repro.queries.engine import error_metrics, per_partition_answers
 from repro.queries.generator import WorkloadSpec
 
 # default = the CI-budget grid (this container is a single CPU core);
-# BENCH_FULL=1 selects the paper-scale grid (256×2048, 100 train queries)
+# BENCH_FULL=1 selects the paper-scale grid (256×2048, 100 train queries);
+# BENCH_QUICK=1 (`benchmarks.run --quick`) shrinks further for the CI
+# smoke lane, where context training dominates the wall clock
 QUICK = os.environ.get("BENCH_FULL", "0") != "1"
+SMOKE = os.environ.get("BENCH_QUICK", "0") == "1"
 CACHE_DIR = os.environ.get("BENCH_CACHE", "results/cache")
 RESULTS_DIR = "results/bench"
 
-N_PARTS = 128 if QUICK else 256
-ROWS = 1024 if QUICK else 2048
-N_TRAIN = 48 if QUICK else 100
-N_TEST = 12 if QUICK else 20
+N_PARTS = 64 if SMOKE else (128 if QUICK else 256)
+ROWS = 512 if SMOKE else (1024 if QUICK else 2048)
+N_TRAIN = 24 if SMOKE else (48 if QUICK else 100)
+N_TEST = 8 if SMOKE else (12 if QUICK else 20)
 BUDGETS = (0.02, 0.05, 0.1, 0.2, 0.4)
 DATASETS = ("tpch", "tpcds", "aria", "kdd")
 
@@ -89,22 +92,6 @@ def get_context(
 # --------------------------------------------------------------------------
 # method evaluation
 # --------------------------------------------------------------------------
-_PICK_CALLS = [0]
-
-
-def _bound_jit_cache():
-    """kmeans shapes vary per (group, budget): every pick can compile a new
-    executable and the accumulated cache exhausts process memory on this
-    1-core box (measured: LLVM 'Cannot allocate memory' after ~3 datasets).
-    Clearing every N picks bounds memory; distinct shapes would have
-    recompiled anyway."""
-    _PICK_CALLS[0] += 1
-    if _PICK_CALLS[0] % 40 == 0:
-        import jax
-
-        jax.clear_caches()
-
-
 def eval_method(ctx: BenchContext, method: str, budget_frac: float,
                 seeds=(0, 1), **pick_kw) -> dict:
     """Mean metrics over test queries (and seeds for randomized methods)."""
@@ -127,7 +114,6 @@ def eval_method(ctx: BenchContext, method: str, budget_frac: float,
             elif method == "lss":
                 ids, w = ctx.lss.pick(q, budget, seed=s)
             elif method == "ps3":
-                _bound_jit_cache()
                 sel = ctx.art.picker.pick(q, budget, seed=s, **pick_kw)
                 ids, w = sel.ids, sel.weights
             else:

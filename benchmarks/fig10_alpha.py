@@ -4,7 +4,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import eval_method, get_context, write_result
-from repro.core.funnel import ImportanceFunnel
 from repro.queries.engine import error_metrics
 
 

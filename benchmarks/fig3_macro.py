@@ -2,8 +2,6 @@
 × 3 metrics, plus the headline data-read-reduction at matched error."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import (
     BUDGETS,
     DATASETS,

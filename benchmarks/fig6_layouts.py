@@ -1,7 +1,7 @@
 """Fig 6 — layout sensitivity: PS³ vs baselines across sort orders."""
 from __future__ import annotations
 
-from benchmarks.common import BUDGETS, error_curve, get_context, write_result
+from benchmarks.common import error_curve, get_context, write_result
 
 LAYOUTS = {
     "tpcds": ("sorted", "sorted:cs_net_profit"),

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import eval_method, get_context, write_result
+from benchmarks.common import get_context, write_result
 from repro.core.baselines import uniform_filter_select, uniform_select
 from repro.queries.engine import error_metrics, predicate_mask
 

@@ -1,7 +1,7 @@
 """Fig 8 — partition-count sensitivity + the random-layout special case."""
 from __future__ import annotations
 
-from benchmarks.common import BUDGETS, QUICK, error_curve, get_context, write_result
+from benchmarks.common import QUICK, error_curve, get_context, write_result
 
 
 def run(dataset="tpch"):

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import BUDGETS, get_context, write_result
+from benchmarks.common import get_context, write_result
 from repro.core.baselines import uniform_select
 from repro.queries.engine import error_metrics, per_partition_answers
 from repro.queries.ir import Aggregate, Clause, Predicate, Query

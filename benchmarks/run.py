@@ -2,7 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,table4] [--quick]
 
-Results land in results/bench/*.json; a summary prints per module.
+`--quick` (the CI smoke lane) sets BENCH_QUICK=1 so modules shrink their
+grids; `--full` selects the paper-scale grid.  Results land in
+results/bench/*.json; a summary prints per module.
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ import traceback
 MODULES = [
     "table4_storage",
     "table_kernels",
+    "bench_serving",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",
@@ -34,9 +37,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--full", action="store_true", help="paper-scale grid")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke lane: reduced grids (BENCH_QUICK=1)")
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     if args.full:
         os.environ["BENCH_FULL"] = "1"
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+    if args.only:
+        unknown = sorted(set(args.only.split(",")) - set(MODULES))
+        if unknown:  # a typo'd --only must not report 0/0 OK in CI
+            ap.error(f"unknown benchmark module(s): {', '.join(unknown)}")
     todo = [m for m in MODULES if not args.only or m in args.only.split(",")]
     failures = []
     t_all = time.time()

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from benchmarks.common import DATASETS, get_context, write_result
-from repro.core.sketches import build_sketches, sketch_storage_bytes
+from repro.core.sketches import sketch_storage_bytes
 
 
 def run(datasets=DATASETS):

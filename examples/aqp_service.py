@@ -2,8 +2,10 @@
 
 Simulates the production flow on a batch of ad-hoc queries:
   ingest → kernel sketch construction → picker training (one-time) →
-  per-query optimization (pick partitions + weights) → weighted execution
-  → answer + error accounting vs the exact run.
+  batched serving through `repro.serving.BatchPicker` (one vectorized
+  feature pass per batch, answer LRU, bounded jit compiles via the
+  pad-and-bucket clustering kernels) → answer + error accounting vs the
+  exact run.
 
     PYTHONPATH=src python examples/aqp_service.py [--budget 0.1]
 """
@@ -15,8 +17,9 @@ import numpy as np
 from repro.core.ingest import build_statistics
 from repro.core.picker import PickerConfig, train_picker
 from repro.data.datasets import make_dataset
-from repro.queries.engine import error_metrics, per_partition_answers
+from repro.queries.engine import error_metrics
 from repro.queries.generator import WorkloadSpec
+from repro.serving import BatchPicker
 
 
 def main():
@@ -44,26 +47,24 @@ def main():
     )
     print(f"[prepare] picker trained in {art.train_seconds:.1f}s")
 
-    # ---- serve a batch of unseen queries
+    # ---- serve a batch of unseen queries through the serving engine
     test = WorkloadSpec(table, seed=777).sample_workload(args.queries)
     budget = max(1, int(args.budget * args.partitions))
-    errs, picked, lat = [], [], []
-    for q in test:
-        answers = per_partition_answers(table, q)  # (exact run, for scoring)
-        truth = answers.truth()
+    server = BatchPicker(art.picker)
+    errs, picked = [], []
+    for q, (est, sel) in zip(test, server.answer_batch(test, budget)):
+        truth = server.cached_answers(q).truth()
         if truth.size == 0:
             continue
-        t0 = time.perf_counter()
-        sel = art.picker.pick(q, budget)
-        lat.append((time.perf_counter() - t0) * 1e3)
-        est = answers.estimate(sel.ids, sel.weights)
         m = error_metrics(truth, est)
         errs.append(m["avg_rel_err"])
         picked.append(len(sel.ids))
         print(f"  {q.describe()[:74]:76s} read {len(sel.ids):3d} "
               f"err {m['avg_rel_err']:.3f}")
+    stats = server.serve_stats()
     print(f"[serve] mean err {np.mean(errs):.3f} @ {args.budget:.0%} budget; "
-          f"picker latency {np.mean(lat):.0f}ms")
+          f"{stats['picks_per_sec']:.1f} picks/s "
+          f"({stats['compiles']} compiles, {stats['shape_buckets']} shape buckets)")
 
 
 if __name__ == "__main__":

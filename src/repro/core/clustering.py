@@ -7,6 +7,23 @@ Initialization is deterministic greedy farthest-point (k-means++ without
 the randomness — the picker must be reproducible per query, Appendix D's
 "deterministic answer" argument).
 
+Jit-stability (serving engine contract): every public entry point pads its
+inputs to **power-of-two shape buckets** — rows to `bucket_size(n)`, cluster
+count to `bucket_size(k)` — and passes the true `n`/`k` as *dynamic* scalars
+that mask padded rows / clusters out of every step (seeding, assignment,
+center update, empty-cluster relocation, medians, exemplars).  The jit cache
+is therefore bounded by the number of (row-bucket, cluster-bucket) pairs —
+O(log²) in the largest candidate set — instead of one executable per
+distinct (group size, budget), which is what previously forced the periodic
+`jax.clear_caches()` workaround in the picker.  The padded math is exact:
+masked rows contribute zero to every reduction, so a padded run returns the
+same selection as an exact-shape run (tested property).
+
+Trace-count instrumentation: each jitted kernel bumps a counter *at trace
+time* (the Python body only runs when XLA compiles a new shape bucket), so
+`trace_counts()` reports exactly how many executables were built — the
+serving benchmarks and the compile-bound test read it.
+
 Exemplar selection follows the paper exactly: the member whose feature
 vector is nearest the *median* feature vector of its cluster; weight =
 cluster size.  The unbiased variant (random member, Appendix D) is kept for
@@ -17,6 +34,7 @@ reproduction (Lance–Williams update, vectorized).
 """
 from __future__ import annotations
 
+import collections
 from functools import partial
 
 import jax
@@ -25,9 +43,41 @@ import numpy as np
 
 _BIG = 1e30
 
+MIN_BUCKET = 8
+
+
+def bucket_size(n: int, minimum: int = MIN_BUCKET) -> int:
+    """Smallest power of two ≥ max(n, minimum) — the static jit shape."""
+    n = max(int(n), minimum)
+    return 1 << (n - 1).bit_length()
+
 
 # --------------------------------------------------------------------------
-# KMeans (JAX)
+# trace/compile accounting
+# --------------------------------------------------------------------------
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _note_trace(kernel: str, nb: int, kb: int) -> None:
+    """Called from inside jitted bodies ⇒ runs once per (shape-bucket) trace."""
+    _TRACE_COUNTS[(kernel, nb, kb)] += 1
+
+
+def trace_counts() -> dict:
+    """{(kernel, row_bucket, cluster_bucket): traces} since the last reset."""
+    return dict(_TRACE_COUNTS)
+
+
+def total_traces() -> int:
+    return sum(_TRACE_COUNTS.values())
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+# --------------------------------------------------------------------------
+# KMeans (JAX, masked static-bucket shapes)
 # --------------------------------------------------------------------------
 def _pairwise_sq(a: jax.Array, b: jax.Array) -> jax.Array:
     """||a_i - b_j||² via the matmul expansion (MXU-friendly)."""
@@ -36,63 +86,68 @@ def _pairwise_sq(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.maximum(aa + bb - 2.0 * (a @ b.T), 0.0)
 
 
-@partial(jax.jit, static_argnames=("k", "iters"))
-def kmeans_fit(
-    x: jax.Array, k: int, iters: int = 25, seed: int = 0
-) -> tuple[jax.Array, jax.Array]:
-    """k-means++ init (fixed key ⇒ deterministic per query) + Lloyd.
+def _pad_rows(x: jax.Array, nb: int) -> jax.Array:
+    return jnp.pad(x, ((0, nb - x.shape[0]), (0, 0)))
 
-    Empty clusters are relocated to the point currently farthest from its
-    center (sklearn-style), which prevents the giant-cluster/outlier-seed
-    failure mode that inflates exemplar weights.
+
+def _fit_body(x, row_valid, center_valid, k, iters):
+    """Masked farthest-point init + Lloyd on padded (nb, f) / (kb,) shapes.
+
+    Padded rows (row_valid False) never seed, never join a cluster, and
+    never attract a relocation; centers ≥ k stay at zero and are masked out
+    of every assignment, so results are independent of the bucket sizes.
     """
-    n = x.shape[0]
-    key = jax.random.PRNGKey(seed)
+    nb, f = x.shape
+    kb = center_valid.shape[0]
 
-    # --- k-means++ seeding (D² sampling)
-    def seed_step(carry, kk):
-        mind, centers, i = carry
-        p = mind / jnp.maximum(mind.sum(), 1e-30)
-        nxt = jax.random.choice(kk, n, p=p)
+    # --- deterministic greedy farthest-point seeding (padding-invariant:
+    # argmax ties break to the lowest index, and padded rows score -1)
+    norms = jnp.where(row_valid, jnp.sum(x * x, axis=1), -1.0)
+    first = jnp.argmax(norms)
+    centers0 = jnp.zeros((kb, f), x.dtype).at[0].set(x[first])
+    mind0 = jnp.where(row_valid, jnp.sum((x - x[first]) ** 2, axis=1), -1.0)
+
+    def seed_step(carry, i):
+        mind, centers = carry
+        nxt = jnp.argmax(mind)  # farthest valid point from current centers
         c = x[nxt]
-        mind = jnp.minimum(mind, jnp.sum((x - c) ** 2, axis=1))
-        centers = centers.at[i].set(c)
-        return (mind, centers, i + 1), None
+        take = i < k
+        upd = jnp.minimum(mind, jnp.sum((x - c) ** 2, axis=1))
+        mind = jnp.where(take & row_valid, upd, mind)
+        centers = jnp.where(take, centers.at[i].set(c), centers)
+        return (mind, centers), None
 
-    first = jax.random.randint(key, (), 0, n)
-    centers0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
-    mind0 = jnp.sum((x - x[first]) ** 2, axis=1)
-    keys = jax.random.split(jax.random.fold_in(key, 1), max(k - 1, 1))
-    (mind, centers, _), _ = jax.lax.scan(
-        seed_step, (mind0, centers0, 1), keys[: max(k - 1, 0)]
-    )
-    if k == 1:
-        centers = centers0
+    (_, centers), _ = jax.lax.scan(seed_step, (mind0, centers0), jnp.arange(1, kb))
 
     def lloyd(_, centers):
-        d = _pairwise_sq(x, centers)  # (n, k)
+        d = _pairwise_sq(x, centers)  # (nb, kb)
+        d = jnp.where(center_valid[None, :], d, _BIG)
         assign = jnp.argmin(d, axis=1)
-        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (n, k)
-        counts = onehot.sum(axis=0)  # (k,)
-        sums = onehot.T @ x  # (k, f)
+        onehot = jax.nn.one_hot(assign, kb, dtype=x.dtype) * row_valid[:, None]
+        counts = onehot.sum(axis=0)  # (kb,)
+        sums = onehot.T @ x  # (kb, f)
         new = sums / jnp.maximum(counts, 1.0)[:, None]
-        # relocate empty clusters to the worst-fit points (one per cluster,
-        # ranked by current distance-to-assigned-center)
-        dmin = jnp.min(d, axis=1)
-        order = jnp.argsort(-dmin)  # farthest points first
-        empty_rank = jnp.cumsum(counts == 0) - 1  # rank among empties
-        reloc = x[order[jnp.clip(empty_rank, 0, n - 1)]]
-        return jnp.where((counts > 0)[:, None], new, reloc)
+        # relocate empty (valid) clusters to the worst-fit points (one per
+        # cluster, ranked by current distance-to-assigned-center)
+        dmin = jnp.where(row_valid, jnp.min(d, axis=1), -1.0)
+        order = jnp.argsort(-dmin)  # farthest valid points first
+        empty = (counts == 0) & center_valid
+        empty_rank = jnp.cumsum(empty) - 1  # rank among empties
+        reloc = x[order[jnp.clip(empty_rank, 0, nb - 1)]]
+        keep_mean = (counts > 0) | ~center_valid
+        return jnp.where(keep_mean[:, None], new, reloc)
 
     centers = jax.lax.fori_loop(0, iters, lloyd, centers)
-    assign = jnp.argmin(_pairwise_sq(x, centers), axis=1)
+    d = jnp.where(center_valid[None, :], _pairwise_sq(x, centers), _BIG)
+    assign = jnp.where(row_valid, jnp.argmin(d, axis=1), -1)
     return centers, assign
 
 
-@partial(jax.jit, static_argnames=("k",))
-def cluster_medians(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
-    """Per-cluster per-feature median via masked sort (static shapes)."""
-    n, f = x.shape
+def _medians_body(x, assign, k_range):
+    """Per-cluster per-feature median via masked sort (static shapes).
+
+    Padded rows carry assign == -1, so they are members of no cluster.
+    """
 
     def med(c):
         m = assign == c
@@ -103,23 +158,81 @@ def cluster_medians(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
         hi = jnp.maximum(cnt // 2, 0)
         return 0.5 * (s[lo] + s[hi])
 
-    return jax.vmap(med)(jnp.arange(k))
+    return jax.vmap(med)(k_range)
 
 
-@partial(jax.jit, static_argnames=("k",))
-def select_exemplars(x: jax.Array, assign: jax.Array, k: int):
-    """Paper §4.2: exemplar = member nearest the cluster median.
-
-    Returns (exemplar_ids (k,), weights (k,), valid (k,)) — `valid` is False
-    for empty clusters (possible when k > #distinct points).
-    """
-    medians = cluster_medians(x, assign, k)
-    d = _pairwise_sq(x, medians)  # (n, k)
-    member = assign[:, None] == jnp.arange(k)[None, :]
+def _exemplar_body(x, assign, center_valid):
+    """Paper §4.2: exemplar = member nearest the cluster median."""
+    kb = center_valid.shape[0]
+    medians = _medians_body(x, assign, jnp.arange(kb))
+    d = _pairwise_sq(x, medians)  # (nb, kb)
+    member = assign[:, None] == jnp.arange(kb)[None, :]
     d = jnp.where(member, d, _BIG)
-    ex = jnp.argmin(d, axis=0)  # (k,)
+    ex = jnp.argmin(d, axis=0)  # (kb,)
     counts = member.sum(axis=0)
-    return ex, counts.astype(jnp.float32), counts > 0
+    return ex, counts.astype(jnp.float32), (counts > 0) & center_valid
+
+
+@partial(jax.jit, static_argnames=("kb", "iters"))
+def _kmeans_fit_padded(x, n, k, kb: int, iters: int):
+    _note_trace("kmeans_fit", x.shape[0], kb)
+    row_valid = jnp.arange(x.shape[0]) < n
+    center_valid = jnp.arange(kb) < k
+    return _fit_body(x, row_valid, center_valid, k, iters)
+
+
+@partial(jax.jit, static_argnames=("kb", "iters"))
+def _kmeans_select_padded(x, n, k, kb: int, iters: int):
+    """Fused fit + exemplar selection: one executable per shape bucket."""
+    _note_trace("kmeans_select", x.shape[0], kb)
+    row_valid = jnp.arange(x.shape[0]) < n
+    center_valid = jnp.arange(kb) < k
+    _, assign = _fit_body(x, row_valid, center_valid, k, iters)
+    return _exemplar_body(x, assign, center_valid)
+
+
+@partial(jax.jit, static_argnames=("kb",))
+def _exemplars_padded(x, assign, k, kb: int):
+    _note_trace("exemplars", x.shape[0], kb)
+    center_valid = jnp.arange(kb) < k
+    return _exemplar_body(x, assign, center_valid)
+
+
+# --------------------------------------------------------------------------
+# public API (exact-shape in, exact-shape out)
+# --------------------------------------------------------------------------
+def kmeans_fit(
+    x: jax.Array, k: int, iters: int = 25, seed: int = 0
+) -> tuple[jax.Array, jax.Array]:
+    """Deterministic KMeans; returns (centers (k, f), assign (n,)).
+
+    `seed` is kept for API compatibility — initialization is deterministic
+    farthest-point, so it has no effect.
+    """
+    del seed
+    x = jnp.asarray(x, jnp.float32)
+    n, k = x.shape[0], int(k)
+    nb, kb = bucket_size(n), bucket_size(k)
+    centers, assign = _kmeans_fit_padded(_pad_rows(x, nb), n, k, kb, int(iters))
+    return centers[:k], assign[:n]
+
+
+def cluster_medians(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Per-cluster per-feature median (k, f)."""
+    x = jnp.asarray(x, jnp.float32)
+    return _medians_body(x, jnp.asarray(assign), jnp.arange(int(k)))
+
+
+def select_exemplars(x: jax.Array, assign: jax.Array, k: int):
+    """Returns (exemplar_ids (k,), weights (k,), valid (k,)) — `valid` is
+    False for empty clusters (possible when k > #distinct points)."""
+    x = jnp.asarray(x, jnp.float32)
+    n, k = x.shape[0], int(k)
+    nb, kb = bucket_size(n), bucket_size(k)
+    xp = _pad_rows(x, nb)
+    ap = jnp.pad(jnp.asarray(assign), (0, nb - n), constant_values=-1)
+    ex, wts, valid = _exemplars_padded(xp, ap, k, kb)
+    return ex[:k], wts[:k], valid[:k]
 
 
 def kmeans_select(
@@ -130,8 +243,9 @@ def kmeans_select(
     if budget >= n:
         return np.arange(n), np.ones(n)
     x = jnp.asarray(features, jnp.float32)
-    _, assign = kmeans_fit(x, int(budget), iters)
-    ex, wts, valid = select_exemplars(x, assign, int(budget))
+    k = int(budget)
+    nb, kb = bucket_size(n), bucket_size(k)
+    ex, wts, valid = _kmeans_select_padded(_pad_rows(x, nb), n, k, kb, int(iters))
     ex, wts, valid = np.asarray(ex), np.asarray(wts), np.asarray(valid)
     return ex[valid], wts[valid]
 
@@ -143,8 +257,7 @@ def kmeans_select_unbiased(
     n = features.shape[0]
     if budget >= n:
         return np.arange(n), np.ones(n)
-    x = jnp.asarray(features, jnp.float32)
-    _, assign = kmeans_fit(x, int(budget), iters)
+    _, assign = kmeans_fit(features, int(budget), iters)
     assign = np.asarray(assign)
     rng = np.random.default_rng(seed)
     ids, wts = [], []
@@ -205,8 +318,7 @@ def hac_select(
     if budget >= n:
         return np.arange(n), np.ones(n)
     assign = hac_fit(features, int(budget), linkage)
-    x = jnp.asarray(features, jnp.float32)
-    ex, wts, valid = select_exemplars(x, jnp.asarray(assign), int(budget))
+    ex, wts, valid = select_exemplars(features, jnp.asarray(assign), int(budget))
     ex, wts, valid = np.asarray(ex), np.asarray(wts), np.asarray(valid)
     return ex[valid], wts[valid]
 

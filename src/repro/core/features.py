@@ -34,7 +34,7 @@ from repro.core.sketches import (
     MEASURE_NAMES,
     TableSketches,
 )
-from repro.data.table import CATEGORICAL, NUMERIC, Table
+from repro.data.table import NUMERIC, Table
 from repro.queries.ir import Clause, Predicate, Query
 
 SELECTIVITY_NAMES = ("sel_upper", "sel_indep", "sel_min", "sel_max")
@@ -171,6 +171,7 @@ class FeatureBuilder:
         self.schema = build_feature_schema(table)
         self.raw = self._build_raw()
         self.normalizer = self._build_normalizer()
+        self._base = self._build_base()
 
     def _build_raw(self) -> np.ndarray:
         n = self.sk.num_partitions
@@ -198,6 +199,20 @@ class FeatureBuilder:
         norm[bit] = 1.0
         return norm
 
+    def _build_base(self) -> np.ndarray:
+        """Query-independent normalized matrix — built once, masked per query."""
+        t = _signed_log1p(self.raw) / self.normalizer
+        bit = np.asarray(self.schema.kinds) == "bitmap"
+        t[:, bit] = self.raw[:, bit]
+        return t
+
+    def _base_matrix(self) -> np.ndarray:
+        # getattr: tolerate FeatureBuilders unpickled from pre-cache artifacts
+        base = getattr(self, "_base", None)
+        if base is None:
+            base = self._base = self._build_base()
+        return base
+
     def column_mask(self, query: Query) -> np.ndarray:
         """(dim,) 0/1 mask: keep used columns; bitmaps only for group-bys."""
         mask = np.zeros(self.schema.dim)
@@ -216,12 +231,27 @@ class FeatureBuilder:
     def features(self, query: Query) -> np.ndarray:
         """(N, dim) normalized masked features for the query."""
         sel = predicate_selectivity(self.table, self.sk, query.predicate)
-        t = _signed_log1p(self.raw) / self.normalizer
-        bit = np.asarray(self.schema.kinds) == "bitmap"
-        t[:, bit] = self.raw[:, bit]
-        out = t * self.column_mask(query)[None, :]
+        out = self._base_matrix() * self.column_mask(query)[None, :]
         out[:, :4] = np.cbrt(sel)
         return out
+
+    def features_batch(
+        self, queries: list[Query]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One vectorized pass for a query batch (the serving engine's path).
+
+        Returns (features (Q, N, dim), selectivity (Q, N, 4)); the shared
+        normalized base matrix is broadcast against the per-query column
+        masks instead of being recomputed per query.
+        """
+        n, dim = self.raw.shape[0], self.schema.dim
+        if not queries:
+            return np.empty((0, n, dim)), np.empty((0, n, 4))
+        masks = np.stack([self.column_mask(q) for q in queries])  # (Q, dim)
+        sels = np.stack([self.selectivity(q) for q in queries])  # (Q, N, 4)
+        out = self._base_matrix()[None, :, :] * masks[:, None, :]
+        out[:, :, :4] = np.cbrt(sels)
+        return out, sels
 
     def selectivity(self, query: Query) -> np.ndarray:
         """(N, 4) raw (un-transformed) selectivity features."""

@@ -16,10 +16,9 @@ already lowers optimally, so only the counting passes use custom kernels
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.data.table import CATEGORICAL, NUMERIC, Table
+from repro.data.table import NUMERIC, Table
 from repro.kernels import ops
 
 

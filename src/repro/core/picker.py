@@ -69,22 +69,6 @@ class Selection:
     clustering_ms: float = 0.0
 
 
-_PICK_COUNT = [0]
-_CLEAR_EVERY = 40
-
-
-def _bound_jit_cache():
-    """KMeans jit shapes vary per (group size, budget); unbounded compile
-    caches exhaust memory on small hosts after a few hundred distinct
-    picks (LLVM 'Cannot allocate memory').  Periodic clearing bounds the
-    cache — distinct shapes would have recompiled anyway."""
-    _PICK_COUNT[0] += 1
-    if _PICK_COUNT[0] % _CLEAR_EVERY == 0:
-        import jax
-
-        jax.clear_caches()
-
-
 class PS3Picker:
     """Trained picker bound to one (table, layout, workload)."""
 
@@ -113,12 +97,17 @@ class PS3Picker:
         use_clustering: bool = True,
         unbiased: bool = False,
         seed: int = 0,
+        feats: np.ndarray | None = None,
+        sel: np.ndarray | None = None,
     ) -> Selection:
+        """`feats`/`sel` accept precomputed feature/selectivity matrices (the
+        batched serving path computes them once for a whole query batch)."""
         t_start = time.perf_counter()
-        _bound_jit_cache()
         cfg = self.config
-        feats = self.fb.features(query)
-        sel = self.fb.selectivity(query)
+        if feats is None:
+            feats = self.fb.features(query)
+        if sel is None:
+            sel = self.fb.selectivity(query)
         n = feats.shape[0]
         candidates = np.flatnonzero(sel[:, 0] > 0)
         if candidates.size == 0:

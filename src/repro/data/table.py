@@ -11,7 +11,7 @@ pass — the layout a TPU ingest pipeline would use.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 

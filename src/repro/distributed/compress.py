@@ -22,7 +22,6 @@ payload with a shared global scale computed by a max-psum.  Sequence:
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

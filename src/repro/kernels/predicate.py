@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import LANE, SUBLANE, interpret, pick_block, round_up
+from repro.kernels.common import LANE, interpret, pick_block, round_up
 
 
 def _kernel(x_ref, lo_ref, hi_ref, gmap_ref, o_ref, cnt_ref, *, num_groups: int):

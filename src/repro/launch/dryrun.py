@@ -12,7 +12,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 #         --shape train_4k --mesh both --out results/dryrun.json
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -119,7 +118,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True):
             ),
         }
     # builtin cost_analysis (counts scan bodies once — kept for reference)
-    ca = compiled.cost_analysis() or {}
+    from repro.distributed.compat import cost_analysis_dict
+
+    ca = cost_analysis_dict(compiled)
     cell["cost_analysis_raw"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

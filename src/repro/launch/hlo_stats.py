@@ -25,7 +25,6 @@ Ring factors on the participant count N:
 """
 from __future__ import annotations
 
-import json
 import re
 
 _DTYPE_BYTES = {

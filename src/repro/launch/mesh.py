@@ -7,22 +7,13 @@ device meshes.  Tests build small meshes through the same function.
 """
 from __future__ import annotations
 
-import jax
+from repro.distributed.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
-
-
-def make_mesh(shape, axes):
-    """Small/test meshes with the same axis conventions."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants (assignment §Roofline)

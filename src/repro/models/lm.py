@@ -16,8 +16,6 @@ slots (residual pass-through).  Heterogeneous caches (KV / conv+recurrent
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.axes import constrain
-from repro.models.layers import DTYPE, dense_init, mlp, mlp_init, split_keys
+from repro.models.layers import dense_init, mlp, mlp_init, split_keys
 
 
 def moe_init(key, cfg):

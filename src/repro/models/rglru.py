@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import DTYPE, dense_init, split_keys
+from repro.models.layers import dense_init, split_keys
 
 C_CONST = 8.0
 NUM_GATE_BLOCKS = 4

@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import DTYPE, dense_init, rmsnorm, rmsnorm_init, split_keys
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init, split_keys
 
 
 def ssd_dims(cfg):

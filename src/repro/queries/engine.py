@@ -16,7 +16,6 @@ import dataclasses
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.table import CATEGORICAL, Table
@@ -172,6 +171,44 @@ class PartitionAnswers:
         safe = np.where(np.abs(total) > 1e-12, total, np.inf)
         ratios = np.abs(self.raw) / np.abs(safe)  # (N, G, n_raw)
         return ratios.max(axis=(1, 2)) if ratios.size else np.zeros(self.raw.shape[0])
+
+
+def query_key(query: Query) -> str:
+    """Canonical cache key for a query (stable across equal IR values)."""
+    return query.describe()
+
+
+class AnswerStore:
+    """Bounded LRU cache of PartitionAnswers keyed by `query_key`.
+
+    One exact per-partition evaluation per distinct query text — repeated
+    queries in a serving batch (dashboards re-issuing the same panel) hit
+    the cache instead of rescanning the table.
+    """
+
+    def __init__(self, table: Table, capacity: int = 256):
+        self.table = table
+        self.capacity = int(capacity)
+        self._cache: dict[str, PartitionAnswers] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, query: Query) -> PartitionAnswers:
+        key = query_key(query)
+        hit = self._cache.pop(key, None)
+        if hit is not None:
+            self.hits += 1
+            self._cache[key] = hit  # re-insert = most recently used
+            return hit
+        self.misses += 1
+        ans = per_partition_answers(self.table, query)
+        self._cache[key] = ans
+        while len(self._cache) > self.capacity:
+            self._cache.pop(next(iter(self._cache)))
+        return ans
+
+    def __len__(self) -> int:
+        return len(self._cache)
 
 
 def per_partition_answers(table: Table, query: Query) -> PartitionAnswers:

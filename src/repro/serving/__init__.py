@@ -1,0 +1,4 @@
+"""Batched, jit-stable serving layer for the PS³ picker (see engine.py)."""
+from repro.serving.engine import BatchPicker, ServingStats
+
+__all__ = ["BatchPicker", "ServingStats"]

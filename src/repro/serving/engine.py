@@ -1,0 +1,150 @@
+"""Batched serving engine for the PS³ picker.
+
+The single-query `PS3Picker.pick` path recomputes the normalized feature
+matrix and the predicate selectivity per query and, before this layer
+existed, compiled a fresh KMeans executable for every distinct
+(group size, budget) pair.  `BatchPicker` is the serving-facing API that
+fixes the amortizable parts:
+
+  * **one vectorized feature pass** — `FeatureBuilder.features_batch`
+    broadcasts the shared normalized base matrix against per-query column
+    masks, so a batch of Q queries costs one O(N·dim) pass plus Q cheap
+    mask products instead of Q full passes;
+  * **bounded compiles** — clustering runs through the pad-and-bucket
+    masked kernels in `core/clustering.py` (power-of-two shape buckets,
+    dynamic n/k masking), so the jit cache is bounded by the bucket count
+    regardless of how many distinct candidate-set sizes traffic produces;
+  * **answer reuse** — exact per-partition answers are memoized in a
+    bounded LRU (`queries.engine.AnswerStore`) keyed by canonical query
+    text, so repeated queries never rescan the table.
+
+`serve_stats` snapshots throughput (picks/sec) and compile counts; the
+`benchmarks/bench_serving.py` canary and the compile-bound test read it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core import clustering
+from repro.core.picker import PS3Picker, Selection
+from repro.queries.engine import AnswerStore, PartitionAnswers
+from repro.queries.ir import Query
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """Cumulative counters across every batch served by one BatchPicker."""
+
+    picks: int = 0
+    seconds: float = 0.0
+    compiles: int = 0  # jit traces of the clustering kernels (shape buckets)
+    answer_hits: int = 0
+    answer_misses: int = 0
+
+    @property
+    def picks_per_sec(self) -> float:
+        return self.picks / self.seconds if self.seconds > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "picks": self.picks,
+            "seconds": self.seconds,
+            "picks_per_sec": self.picks_per_sec,
+            "compiles": self.compiles,
+            "answer_hits": self.answer_hits,
+            "answer_misses": self.answer_misses,
+        }
+
+
+class BatchPicker:
+    """Serves batches of queries against one trained `PS3Picker`.
+
+    Thin, stateful, and cheap to construct: all heavy artifacts (sketches,
+    funnel, cluster mask) live on the wrapped picker; this layer only adds
+    the batched feature pass, the answer LRU, and telemetry.
+    """
+
+    def __init__(self, picker: PS3Picker, answer_capacity: int = 256):
+        self.picker = picker
+        self.answers = AnswerStore(picker.table, capacity=answer_capacity)
+        self.stats = ServingStats()
+        # census baseline: report only buckets traced after this instance
+        # was created, not process-wide history (e.g. training-time picks)
+        self._bucket_base = dict(clustering.trace_counts())
+
+    # ---- picking ----------------------------------------------------------
+    def pick_batch(
+        self, queries: Sequence[Query], budget: int, **pick_kw
+    ) -> list[Selection]:
+        """Per-query Selections for a batch, via one vectorized feature pass."""
+        queries = list(queries)
+        traces0 = clustering.total_traces()
+        t0 = time.perf_counter()
+        feats, sels = self.picker.fb.features_batch(queries)
+        out = [
+            self.picker.pick(q, budget, feats=feats[i], sel=sels[i], **pick_kw)
+            for i, q in enumerate(queries)
+        ]
+        self.stats.picks += len(queries)
+        self.stats.seconds += time.perf_counter() - t0
+        self.stats.compiles += clustering.total_traces() - traces0
+        return out
+
+    # ---- answering --------------------------------------------------------
+    def answer_batch(
+        self, queries: Sequence[Query], budget: int, **pick_kw
+    ) -> list[tuple[np.ndarray, Selection]]:
+        """(estimate Ã_g, Selection) per query; exact answers are cached."""
+        queries = list(queries)  # pick_batch would otherwise drain an iterator
+        selections = self.pick_batch(queries, budget, **pick_kw)
+        hits0, misses0 = self.answers.hits, self.answers.misses
+        out = []
+        for q, sel in zip(queries, selections):
+            ans = self.answers.get(q)
+            out.append((ans.estimate(sel.ids, sel.weights), sel))
+        self.stats.answer_hits += self.answers.hits - hits0
+        self.stats.answer_misses += self.answers.misses - misses0
+        return out
+
+    def cached_answers(self, query: Query) -> PartitionAnswers:
+        """Exact per-partition answers for one query, through the LRU."""
+        return self.answers.get(query)
+
+    # ---- telemetry --------------------------------------------------------
+    def serve_stats(self) -> dict:
+        """Cumulative stats + the shape-bucket census since construction."""
+        buckets = {
+            key: count - self._bucket_base.get(key, 0)
+            for key, count in clustering.trace_counts().items()
+        }
+        buckets = {k: c for k, c in buckets.items() if c > 0}
+        return {
+            **self.stats.as_dict(),
+            "shape_buckets": len(buckets),
+            "bucket_traces": {
+                f"{kern}:n{nb}:k{kb}": c for (kern, nb, kb), c in buckets.items()
+            },
+        }
+
+
+def pick_stream(
+    picker: PS3Picker,
+    queries: Iterable[Query],
+    budget: int,
+    batch_size: int = 32,
+    **pick_kw,
+) -> Iterable[Selection]:
+    """Convenience: chunk an unbounded query stream through a BatchPicker."""
+    bp = BatchPicker(picker)
+    chunk: list[Query] = []
+    for q in queries:
+        chunk.append(q)
+        if len(chunk) >= batch_size:
+            yield from bp.pick_batch(chunk, budget, **pick_kw)
+            chunk = []
+    if chunk:
+        yield from bp.pick_batch(chunk, budget, **pick_kw)

@@ -17,7 +17,6 @@ Update math always runs in f32; params stay bf16 (master-less, stochastic
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

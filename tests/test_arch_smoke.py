@@ -11,7 +11,10 @@ import pytest
 
 from repro.configs import all_archs, get_config, get_smoke
 from repro.models import lm
-from repro.models.config import SHAPES, applicable_shapes
+from repro.models.config import applicable_shapes
+
+# LM-substrate sweep over every arch (~2 min): full-suite lane only
+pytestmark = pytest.mark.slow
 
 
 def _batch_for(cfg, b=2, s=32):

@@ -7,12 +7,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.clustering import (
-    hac_fit,
-    kmeans_fit,
-    kmeans_select,
-    select_exemplars,
-)
+from repro.core.clustering import hac_fit, kmeans_fit, kmeans_select
 from repro.core.features import FeatureBuilder
 from repro.core.funnel import allocate, make_labels, pick_thresholds
 from repro.core.gbdt import fit_gbdt, forest_predict_jnp

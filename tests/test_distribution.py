@@ -8,20 +8,19 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding
+from repro.distributed.compat import make_mesh
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def test_spec_rules_basics():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     # expert stack (stacked): (U, E, d, ff) → (None, M, F→None, None)
     s = sharding.spec_for_path("slots/0/ffn/wi", (4, 8, 64, 128), mesh, stacked=True)
     assert s == P(None, "model", None, None)
@@ -37,8 +36,7 @@ def test_spec_rules_basics():
 
 
 def test_indivisible_dims_fall_back_to_replication():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     # simulate model axis size 1 → everything divides; use rank logic only
     s = sharding.spec_for_path("head", (63, 127), mesh, stacked=False)
     assert s == P(None, "model") or s == P("data", "model")  # data absent → None
@@ -49,8 +47,7 @@ def test_param_shardings_cover_all_archs():
     from repro.configs import all_archs, get_smoke
     from repro.models import lm
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     for arch in all_archs():
         cfg = get_smoke(arch)
         shapes = lm.param_shapes(cfg)
@@ -64,8 +61,8 @@ _SUBPROC_COMPRESS = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp, json
     from jax.sharding import PartitionSpec as P
     from repro.distributed.compress import compressed_pod_mean
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     rng = np.random.default_rng(0)
     g = {"a": jnp.asarray(rng.normal(size=(64, 32)), jnp.float32),
          "b": jnp.asarray(rng.normal(size=(130,)), jnp.float32)}
@@ -79,6 +76,7 @@ _SUBPROC_COMPRESS = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_compressed_psum_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", _SUBPROC_COMPRESS],
@@ -115,6 +113,7 @@ _SUBPROC_DRYRUN = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_dryrun_code_path_reduced_mesh():
     """The exact dry-run path (lower+compile+analyze) on 8 fake devices."""
     r = subprocess.run(

@@ -5,7 +5,6 @@ float32/bfloat16 inputs (accumulation is always f32).  Seeded randomized
 property sweeps stand in for hypothesis (not installed in this image).
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
