@@ -1,0 +1,132 @@
+"""Offline-plane benchmark: sketch-build and training-label throughput,
+host vs device backend — the perf trajectory for the ingest + picker
+training pipeline (ISSUE 2), mirroring what `bench_serving` does for the
+online plane.
+
+Reports, per dataset:
+  * `build_sketches` wall time on both backends (device cold = includes
+    kernel compiles, then warm steady state),
+  * `build_training_data` label throughput (queries/sec) on both
+    backends, with the device driver's compile census — if shape
+    bucketing regresses, `eval_compiles` blows up toward the query count,
+  * `train_picker` end-to-end wall time on both backends.
+
+The speedup ratios (device-warm over host) are the regression-gated
+metrics: absolute wall times vary with machine speed, the within-run
+ratio does not.  `benchmarks/check_regression.py` diffs them against the
+committed baseline in CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import write_result
+from repro.backends import default_backend
+from repro.core.picker import PickerConfig, build_training_data, train_picker
+from repro.core.features import FeatureBuilder
+from repro.core.sketches import build_sketches
+from repro.data.datasets import make_dataset
+from repro.queries import device
+from repro.queries.engine import EvalCache
+from repro.queries.generator import WorkloadSpec
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+N_PARTS = 64 if QUICK else (128 if not FULL else 256)
+ROWS = 512 if QUICK else (1024 if not FULL else 2048)
+N_QUERIES = 48 if QUICK else 100
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def _timed_min(reps, fn, *args, **kw):
+    """Best-of-N wall time — this container's scheduler is noisy."""
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        out, t = _timed(fn, *args, **kw)
+        best = min(best, t)
+    return out, best
+
+
+def run(datasets=("tpch", "kdd")):
+    out = {}
+    for ds in datasets:
+        table = make_dataset(ds, num_partitions=N_PARTS, rows_per_partition=ROWS)
+        queries = WorkloadSpec(table, seed=1234).sample_workload(N_QUERIES)
+
+        # ---- sketch construction
+        sk_host, t_sk_host = _timed_min(3, build_sketches, table, backend="host")
+        _, t_sk_dev_cold = _timed(build_sketches, table, backend="device")
+        _, t_sk_dev_warm = _timed_min(3, build_sketches, table, backend="device")
+
+        # ---- training labels (per-partition answers + features)
+        fb = FeatureBuilder(table, sk_host)
+        _, t_lab_host = _timed_min(
+            3, build_training_data, table, fb, queries, backend="host"
+        )
+        device.TRACES.reset()
+        cache = EvalCache(table)
+        _, t_lab_dev_cold = _timed(
+            build_training_data, table, fb, queries, backend="device", cache=cache
+        )
+        compiles = device.TRACES.total()
+        census = len(device.workload_census(table, queries, cache))
+        _, t_lab_dev_warm = _timed_min(
+            3, build_training_data, table, fb, queries, backend="device", cache=cache
+        )
+
+        # ---- end-to-end picker training (funnel on, featsel off so the
+        # label pass dominates, matching the offline-plane focus)
+        cfg = PickerConfig(num_trees=20, tree_depth=4, feature_selection=False)
+        wl = WorkloadSpec(table, seed=1234)
+        _, t_train_host = _timed(
+            train_picker, table, wl, config=cfg, fb=fb, queries=queries,
+            backend="host",
+        )
+        _, t_train_dev = _timed(
+            train_picker, table, wl, config=cfg, fb=fb, queries=queries,
+            backend="device",
+        )
+
+        out[ds] = {
+            "partitions": N_PARTS,
+            "rows_per_partition": ROWS,
+            "queries": N_QUERIES,
+            "default_backend": default_backend(),
+            "sketch_host_s": t_sk_host,
+            "sketch_device_cold_s": t_sk_dev_cold,
+            "sketch_device_warm_s": t_sk_dev_warm,
+            "sketch_speedup_warm": t_sk_host / max(t_sk_dev_warm, 1e-9),
+            "labels_host_s": t_lab_host,
+            "labels_device_cold_s": t_lab_dev_cold,
+            "labels_device_warm_s": t_lab_dev_warm,
+            "labels_per_sec_host": N_QUERIES / t_lab_host,
+            "labels_per_sec_device_warm": N_QUERIES / t_lab_dev_warm,
+            "label_speedup_warm": t_lab_host / max(t_lab_dev_warm, 1e-9),
+            "train_host_s": t_train_host,
+            "train_device_s": t_train_dev,
+            "train_speedup": t_train_host / max(t_train_dev, 1e-9),
+            "eval_compiles": int(compiles),
+            "eval_census": int(census),
+        }
+        print(
+            f"[bench_offline:{ds}] sketches host {t_sk_host:.2f}s / device "
+            f"{t_sk_dev_warm:.2f}s warm ({t_sk_dev_cold:.2f}s cold); labels "
+            f"host {t_lab_host:.2f}s / device {t_lab_dev_warm:.2f}s warm "
+            f"(x{out[ds]['label_speedup_warm']:.1f}, {compiles} compiles vs "
+            f"census {census}); train host {t_train_host:.1f}s / device "
+            f"{t_train_dev:.1f}s (x{out[ds]['train_speedup']:.1f})"
+        )
+    write_result("bench_offline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Diff benchmark results against a committed baseline; fail on regression.
+
+    python -m benchmarks.check_regression \
+        results/bench/bench_offline.json benchmarks/baselines/bench_offline.json
+
+Gated metrics are chosen to be robust on heterogeneous CI machines:
+within-run *ratios* (device-over-host speedups) cancel machine speed, and
+compile counts are deterministic.  Absolute wall times are reported for
+context but never gated.  The default threshold fails a metric that is
+worse than the baseline by more than `--max-ratio` (the ISSUE-2 contract:
+>2× regression fails the lane).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric → (direction, basis time fields); "higher" = current must stay
+# >= baseline / max_ratio, "lower" = current <= baseline * max_ratio.
+# A ratio with any sub-measurable basis wall time (below
+# MIN_BASIS_SECONDS in either run) is scheduler noise, not signal — skipped.
+GATED = {
+    "label_speedup_warm": ("higher", ("labels_host_s", "labels_device_warm_s")),
+    "sketch_speedup_warm": ("higher", ("sketch_host_s", "sketch_device_warm_s")),
+    "train_speedup": ("higher", ("train_host_s", "train_device_s")),
+    "eval_compiles": ("lower", ()),
+}
+MIN_BASIS_SECONDS = 0.15
+
+
+def check(current: dict, baseline: dict, max_ratio: float) -> list[str]:
+    problems = []
+    for ds, base in baseline.items():
+        cur = current.get(ds)
+        if cur is None:
+            problems.append(f"{ds}: missing from current results")
+            continue
+        for metric, (direction, basis) in GATED.items():
+            if metric not in base:
+                continue
+            if basis and any(
+                float(d.get(f, 0.0)) < MIN_BASIS_SECONDS
+                for d in (base, cur)
+                for f in basis
+            ):
+                print(f"  skip {ds}.{metric}: basis times < {MIN_BASIS_SECONDS}s")
+                continue
+            b, c = float(base[metric]), float(cur.get(metric, float("nan")))
+            if direction == "higher":
+                ok = c >= b / max_ratio
+            else:
+                ok = c <= max(b, 1.0) * max_ratio
+            if not ok:
+                problems.append(
+                    f"{ds}.{metric}: {c:.3g} vs baseline {b:.3g} "
+                    f"(>{max_ratio:g}x regression, {direction} is better)"
+                )
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh results JSON (results/bench/...)")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--max-ratio", type=float, default=2.0)
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    problems = check(current, baseline, args.max_ratio)
+    if problems:
+        print("benchmark regression vs committed baseline:")
+        for p in problems:
+            print("  " + p)
+        sys.exit(1)
+    gated = [m for ds in baseline for m in GATED if m in baseline[ds]]
+    print(f"no regression: {len(gated)} gated metrics within "
+          f"{args.max_ratio:g}x of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ MODULES = [
     "table4_storage",
     "table_kernels",
     "bench_serving",
+    "bench_offline",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",
@@ -51,7 +52,7 @@ def main() -> None:
         if unknown:  # a typo'd --only must not report 0/0 OK in CI
             ap.error(f"unknown benchmark module(s): {', '.join(unknown)}")
     todo = [m for m in MODULES if not args.only or m in args.only.split(",")]
-    failures = []
+    entries: list[tuple[str, str, float]] = []
     t_all = time.time()
     for name in todo:
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
@@ -62,11 +63,23 @@ def main() -> None:
             jax.clear_caches()  # bound the jit cache across modules
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             mod.run()
+            entries.append((name, "OK", time.time() - t0))
             print(f"--- {name} done in {time.time() - t0:.1f}s")
         except Exception:
             traceback.print_exc()
-            failures.append(name)
-    print(f"\n{len(todo) - len(failures)}/{len(todo)} benchmarks OK "
+            entries.append((name, "FAIL", time.time() - t0))
+
+    # self-describing summary: CI artifacts must show what ran, on which
+    # backend, and what each entry cost — not just an aggregate OK count
+    from repro.backends import default_backend
+    import jax
+
+    failures = [name for name, status, _ in entries if status == "FAIL"]
+    print(f"\neval backend: {default_backend()} (platform: {jax.default_backend()}; "
+          f"override via REPRO_EVAL_BACKEND)")
+    for name, status, secs in entries:
+        print(f"  {name:<28} {status:<5} {secs:7.1f}s")
+    print(f"{len(todo) - len(failures)}/{len(todo)} benchmarks OK "
           f"in {time.time() - t_all:.0f}s")
     if failures:
         print("FAILED:", ", ".join(failures))

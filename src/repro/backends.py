@@ -1,0 +1,50 @@
+"""Execution-backend policy for the offline plane (ingest + query eval).
+
+Two backends with identical semantics:
+
+  * ``"host"``   — vectorized numpy (no compile step, fastest on CPU for
+    one-off small evaluations);
+  * ``"device"`` — the kernel layer: shape-bucketed jitted drivers over
+    the Pallas kernels (`kernels/predicate`, `kernels/groupagg`,
+    `kernels/moments`, `kernels/histogram`).  Off-TPU the drivers lower
+    through the pure-jnp kernel oracles (XLA) instead of Pallas interpret
+    mode, which is a correctness emulator, not a performance path.
+
+Resolution order: explicit argument > ``REPRO_EVAL_BACKEND`` env var >
+platform default ("device" on TPU, "host" elsewhere).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+BACKENDS = ("host", "device")
+
+
+def default_backend() -> str:
+    """The platform default: kernels on TPU, numpy elsewhere."""
+    env = os.environ.get("REPRO_EVAL_BACKEND", "")
+    if env:
+        return resolve_backend(env)
+    return "device" if jax.default_backend() == "tpu" else "host"
+
+
+def resolve_backend(backend: str | None) -> str:
+    if backend is None or backend == "":
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    return backend
+
+
+def kernels_use_ref(use_ref: bool | None = None) -> bool:
+    """Whether the device backend should run the jnp kernel oracles.
+
+    On TPU the Pallas kernels run natively; elsewhere the oracles are the
+    compiled (XLA) form of the same math — Pallas interpret mode stays
+    available for parity tests via an explicit ``use_ref=False``.
+    """
+    if use_ref is None:
+        return jax.default_backend() != "tpu"
+    return use_ref

@@ -34,12 +34,13 @@ reproduction (Lance–Williams update, vectorized).
 """
 from __future__ import annotations
 
-import collections
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.telemetry import TraceRegistry
 
 _BIG = 1e30
 
@@ -53,27 +54,27 @@ def bucket_size(n: int, minimum: int = MIN_BUCKET) -> int:
 
 
 # --------------------------------------------------------------------------
-# trace/compile accounting
+# trace/compile accounting (shared registry pattern; see kernels/telemetry)
 # --------------------------------------------------------------------------
-_TRACE_COUNTS: collections.Counter = collections.Counter()
+TRACES = TraceRegistry("clustering")
 
 
 def _note_trace(kernel: str, nb: int, kb: int) -> None:
     """Called from inside jitted bodies ⇒ runs once per (shape-bucket) trace."""
-    _TRACE_COUNTS[(kernel, nb, kb)] += 1
+    TRACES.note(kernel, nb, kb)
 
 
 def trace_counts() -> dict:
     """{(kernel, row_bucket, cluster_bucket): traces} since the last reset."""
-    return dict(_TRACE_COUNTS)
+    return TRACES.counts()
 
 
 def total_traces() -> int:
-    return sum(_TRACE_COUNTS.values())
+    return TRACES.total()
 
 
 def reset_trace_counts() -> None:
-    _TRACE_COUNTS.clear()
+    TRACES.reset()
 
 
 # --------------------------------------------------------------------------

@@ -1,9 +1,11 @@
 """Accelerated sketch construction — the TPU ingest pipeline.
 
 `build_statistics` computes the numeric tensors behind every sketch
-(measures, categorical counts, histogram bucket counts) with the Pallas
-kernel layer in a single pass per column, exactly mirroring the host
-`build_sketches` outputs (tested for parity).  Per-partition sketch
+(measures, categorical counts, histogram bucket counts, discrete-numeric
+heavy-hitter counts) with the Pallas kernel layer in a single pass per
+column; it is the engine behind `core.sketches.build_sketches(table,
+backend="device")` and is tested for parity against the host tensors.
+Per-partition sketch
 construction is embarrassingly parallel, so under a device mesh the
 partition axis is simply sharded (shard_map in the data plane launcher);
 each device streams its local partitions HBM→VMEM once.
@@ -44,11 +46,28 @@ def measures_from_moments(raw: np.ndarray, rows: int, positive: bool) -> np.ndar
     return out
 
 
-def build_statistics(table: Table, use_ref: bool = False) -> dict[str, dict]:
+def discrete_span(data: np.ndarray, max_width: int = 4096) -> tuple[int, int] | None:
+    """(lo, width) when a numeric column is integer-valued with a small
+    range — the case where exact heavy-hitter counts apply — else None."""
+    codes = data.astype(np.int64)
+    if not np.all(data == codes):
+        return None
+    lo = int(codes.min())
+    width = int(codes.max()) - lo + 1
+    return (lo, width) if width <= max_width else None
+
+
+def build_statistics(
+    table: Table, use_ref: bool = False, discrete_counts: bool = False
+) -> dict[str, dict]:
     """Kernel-computed per-column statistics tensors.
 
     Returns {column: {"measures": (P,9)} | {"counts": (P,card)}} plus
     numeric histogram counts under "hist_counts" given equi-depth edges.
+    With ``discrete_counts=True``, integer-valued numeric columns with a
+    small range additionally carry exact per-partition frequencies
+    ("discrete_counts", "discrete_lo") — the heavy-hitter input that
+    `build_sketches(backend="device")` consumes.
     """
     out: dict[str, dict] = {}
     rows = table.rows_per_partition
@@ -68,6 +87,14 @@ def build_statistics(table: Table, use_ref: bool = False) -> dict[str, dict]:
                 "hist_edges": edges,
                 "hist_counts": hist,
             }
+            if discrete_counts:
+                span = discrete_span(data)
+                if span is not None:
+                    lo, width = span
+                    codes = jnp.asarray(data.astype(np.int64) - lo, jnp.int32)
+                    counts = np.asarray(ops.bincount_op(codes, width, use_ref=use_ref))
+                    out[spec.name]["discrete_counts"] = counts.astype(np.float64)
+                    out[spec.name]["discrete_lo"] = lo
         else:
             codes = jnp.asarray(data)
             counts = np.asarray(

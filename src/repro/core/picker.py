@@ -37,7 +37,12 @@ from repro.core.funnel import (
 )
 from repro.core.outliers import DEFAULT_OUTLIER_FRAC, find_outliers
 from repro.data.table import Table
-from repro.queries.engine import PartitionAnswers, per_partition_answers
+from repro.queries.engine import (
+    EvalCache,
+    PartitionAnswers,
+    per_partition_answers,
+    per_partition_answers_batch,
+)
 from repro.queries.generator import WorkloadSpec
 from repro.queries.ir import Query
 
@@ -214,14 +219,23 @@ class TrainedArtifacts:
 
 
 def build_training_data(
-    table: Table, fb: FeatureBuilder, queries: list[Query]
+    table: Table,
+    fb: FeatureBuilder,
+    queries: list[Query],
+    backend: str | None = None,
+    cache: EvalCache | None = None,
 ) -> tuple[list[np.ndarray], list[np.ndarray], list[PartitionAnswers]]:
-    feats, contribs, answers = [], [], []
-    for q in queries:
-        a = per_partition_answers(table, q)
-        feats.append(fb.features(q))
-        contribs.append(a.contribution())
-        answers.append(a)
+    """Truth labels + features for a training workload.
+
+    Per-partition answers run through `per_partition_answers_batch` — one
+    stacked device pass per shape bucket under ``backend="device"`` — and
+    the shared `EvalCache` keeps group codes and projection casts hot
+    across the workload instead of rebuilding them per query.
+    """
+    cache = cache or EvalCache(table)
+    answers = per_partition_answers_batch(table, queries, backend=backend, cache=cache)
+    feats = [fb.features(q) for q in queries]
+    contribs = [a.contribution() for a in answers]
     return feats, contribs, answers
 
 
@@ -232,15 +246,16 @@ def train_picker(
     config: PickerConfig | None = None,
     fb: FeatureBuilder | None = None,
     queries: list[Query] | None = None,
+    backend: str | None = None,
 ) -> TrainedArtifacts:
     t0 = time.perf_counter()
     config = config or PickerConfig()
     if fb is None:
         from repro.core.sketches import build_sketches
 
-        fb = FeatureBuilder(table, build_sketches(table))
+        fb = FeatureBuilder(table, build_sketches(table, backend=backend))
     queries = queries or workload.sample_workload(num_train_queries)
-    feats, contribs, answers = build_training_data(table, fb, queries)
+    feats, contribs, answers = build_training_data(table, fb, queries, backend=backend)
     funnel = train_funnel(
         feats,
         contribs,

@@ -119,7 +119,44 @@ def _equi_depth_edges(col: np.ndarray, buckets: int = NUM_BUCKETS) -> np.ndarray
 
 
 def _akmv(col: np.ndarray, k: int = AKMV_K):
-    """AKMV sketch per partition: ndv estimate + distinct-value freq stats."""
+    """AKMV sketch per partition: ndv estimate + distinct-value freq stats.
+
+    One vectorized pass for all partitions: sort the hashes per row, turn
+    run boundaries into run ids, and segment-count the run lengths — the
+    k *minimum* hashed values are exactly the first k runs of the sorted
+    order, so the top-k selection is a prefix mask, not a loop.  The hash
+    stays in float64 on the host: JAX without x64 would demote the 53-bit
+    hashes to float32 and introduce collisions at partition sizes.
+    """
+    n, r = col.shape
+    hs = np.sort(hash_u64(col.reshape(-1)).reshape(n, r), axis=1)
+    new = np.ones((n, r), bool)
+    new[:, 1:] = hs[:, 1:] != hs[:, :-1]
+    rid = np.cumsum(new, axis=1) - 1  # run (distinct-value) index per element
+    d = rid[:, -1] + 1  # exact distinct count per partition
+    seg = (rid + np.arange(n, dtype=np.int64)[:, None] * r).reshape(-1)
+    cnts = np.bincount(seg, minlength=n * r).reshape(n, r).astype(np.float64)
+    m = np.minimum(d, k)  # number of retained min-hash runs
+    in_top = np.arange(r)[None, :] < m[:, None]
+    c = np.where(in_top, cnts, 0.0)
+    csum = c.sum(axis=1)
+    freq = np.stack(
+        [
+            csum / m,
+            c.max(axis=1),
+            np.where(in_top, cnts, np.inf).min(axis=1),
+            csum,
+        ],
+        axis=1,
+    )
+    # ndv: exact when d <= k, else (k-1)/U_(k) with U_(k) = k-th min unique
+    kth = hs[np.arange(n), np.argmax(new & (rid == k - 1), axis=1)]
+    ndv = np.where(d <= k, d.astype(np.float64), (k - 1) / np.maximum(kth, 1e-12))
+    return ndv, freq
+
+
+def _akmv_reference(col: np.ndarray, k: int = AKMV_K):
+    """Per-partition loop formulation of `_akmv` (parity-test oracle)."""
     n, r = col.shape
     h = hash_u64(col.reshape(-1)).reshape(n, r)
     ndv = np.zeros(n, np.float64)
@@ -138,6 +175,17 @@ def _akmv(col: np.ndarray, k: int = AKMV_K):
             c = counts[idx].astype(np.float64)
         freq[i] = (c.mean(), c.max(), c.min(), c.sum())
     return ndv, freq
+
+
+def _partition_bincount(codes: np.ndarray, card: int) -> np.ndarray:
+    """(N, R) int codes → (N, card) exact counts, one vectorized bincount."""
+    n, r = codes.shape
+    seg = codes.astype(np.int64) + np.arange(n, dtype=np.int64)[:, None] * card
+    return (
+        np.bincount(seg.reshape(-1), minlength=n * card)
+        .reshape(n, card)
+        .astype(np.float64)
+    )
 
 
 def lossy_counting(stream: np.ndarray, support: float = HH_SUPPORT) -> dict[int, float]:
@@ -180,24 +228,58 @@ def _heavy_hitters_exact(counts: np.ndarray, support: float = HH_SUPPORT):
     return stats, items, freq, is_hh
 
 
-def build_sketches(table: Table) -> TableSketches:
+def build_sketches(
+    table: Table, backend: str | None = None, use_ref: bool | None = None
+) -> TableSketches:
+    """All per-partition sketches for a table (paper §3.1, Table 1).
+
+    ``backend="device"`` derives the numeric tensors (measures, histogram
+    counts, exact categorical / discrete-numeric frequencies) from the
+    Pallas ingest kernels via `core.ingest.build_statistics` — one device
+    pass per column; ``backend="host"`` computes the same tensors in
+    numpy.  Count tensors are bit-identical across backends (float32
+    accumulation of integer counts is exact), measures agree to float32
+    rounding.  AKMV and equi-depth edge *placement* stay on the host in
+    both modes (53-bit hashes and a global sort; see `_akmv`).
+    """
+    from repro.backends import resolve_backend
+
+    backend = resolve_backend(backend)
+    stats: dict[str, dict] = {}
+    if backend == "device":
+        from repro.backends import kernels_use_ref
+        from repro.core.ingest import build_statistics
+
+        stats = build_statistics(
+            table, use_ref=kernels_use_ref(use_ref), discrete_counts=True
+        )
+
     cols: dict[str, ColumnSketch] = {}
     n = table.num_partitions
     for spec in table.schema:
         data = table.columns[spec.name]
         if spec.kind == NUMERIC:
-            measures = _measures(data, spec.positive)
-            edges = _equi_depth_edges(data)
+            if backend == "device":
+                measures = stats[spec.name]["measures"]
+                edges = stats[spec.name]["hist_edges"]
+            else:
+                measures = _measures(data, spec.positive)
+                edges = _equi_depth_edges(data)
             ndv, dv_freq = _akmv(data)
             # HH for numerics: only discrete-ish columns surface ≥1% items.
-            codes = data.astype(np.int64)
-            discrete = bool(np.all(data == codes) and data.max() - data.min() < 4096)
-            if discrete:
-                lo = int(codes.min())
-                width = int(codes.max()) - lo + 1
-                counts = np.zeros((n, width), np.float64)
-                for i in range(n):
-                    counts[i] = np.bincount(codes[i] - lo, minlength=width)
+            counts = None
+            lo = 0
+            if backend == "device":
+                counts = stats[spec.name].get("discrete_counts")
+                lo = stats[spec.name].get("discrete_lo", 0)
+            else:
+                from repro.core.ingest import discrete_span
+
+                span = discrete_span(data)
+                if span is not None:
+                    lo, width = span
+                    counts = _partition_bincount(data.astype(np.int64) - lo, width)
+            if counts is not None:
                 hh_stats, hh_items, _, _ = _heavy_hitters_exact(counts)
                 hh_items = [
                     {k + lo: v for k, v in d.items()} for d in hh_items
@@ -211,10 +293,10 @@ def build_sketches(table: Table) -> TableSketches:
             )
         else:
             card = spec.cardinality
-            counts = np.zeros((n, card), np.float64)
-            flat = data
-            for i in range(n):
-                counts[i] = np.bincount(flat[i], minlength=card)
+            if backend == "device":
+                counts = stats[spec.name]["counts"]
+            else:
+                counts = _partition_bincount(data, card)
             ndv, dv_freq = _akmv(data)
             hh_stats, hh_items, freq, is_hh = _heavy_hitters_exact(counts)
             bitmap = None

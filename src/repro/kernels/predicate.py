@@ -54,11 +54,16 @@ def predicate_eval(
     cols: jax.Array,  # (P, C, R) gathered clause columns
     lo: jax.Array,  # (P, C) or (C,) inclusive lower bounds
     hi: jax.Array,  # (P, C) or (C,) exclusive upper bounds
-    group_map: jax.Array,  # (C, G) one-hot clause→OR-group membership
+    group_map: jax.Array,  # (C, G) or (P, C, G) one-hot clause→OR-group map
     num_groups: int,
     block_rows: int = 1024,
 ) -> tuple[jax.Array, jax.Array]:
-    """→ (mask (P, R) float 0/1, count (P,)) for the AND-of-ORs predicate."""
+    """→ (mask (P, R) float 0/1, count (P,)) for the AND-of-ORs predicate.
+
+    A 3-D `group_map` carries one clause→group map per partition row — the
+    stacked-query driver packs Q queries along the partition axis, and each
+    query brings its own OR-group structure.
+    """
     p, c, r = cols.shape
     bt = pick_block(r, block_rows, LANE)
     rp = round_up(r, bt)
@@ -68,9 +73,9 @@ def predicate_eval(
     # pad rows with NaN: fails every interval test => mask 0
     xp = jnp.pad(cols.astype(jnp.float32), ((0, 0), (0, 0), (0, rp - r)),
                  constant_values=jnp.nan)
-    gm = jnp.broadcast_to(
-        group_map.astype(jnp.float32)[None], (p, c, num_groups)
-    )
+    gm = group_map.astype(jnp.float32)
+    if gm.ndim == 2:
+        gm = jnp.broadcast_to(gm[None], (p, c, num_groups))
     mask, cnt = pl.pallas_call(
         functools.partial(_kernel, num_groups=num_groups),
         grid=(p, rp // bt),

@@ -66,9 +66,11 @@ def predicate_eval_ref(
         lo = jnp.broadcast_to(lo[None], x.shape[:2])
         hi = jnp.broadcast_to(hi[None], x.shape[:2])
     clause = (x >= lo[:, :, None]) & (x < hi[:, :, None])  # (P, C, R)
-    gm = group_map.astype(bool)  # (C, G)
+    gm = group_map.astype(bool)  # (C, G) or (P, C, G)
+    if gm.ndim == 2:
+        gm = jnp.broadcast_to(gm[None], (x.shape[0],) + gm.shape)
     grouped = jnp.stack(
-        [jnp.any(clause & gm[None, :, g, None], axis=1) for g in range(gm.shape[1])],
+        [jnp.any(clause & gm[:, :, g, None], axis=1) for g in range(gm.shape[2])],
         axis=1,
     )  # (P, G, R)
     mask = jnp.all(grouped, axis=1).astype(jnp.float32)

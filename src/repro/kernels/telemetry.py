@@ -1,0 +1,38 @@
+"""Trace-count telemetry for jitted kernels (shared registry pattern).
+
+A jitted function's Python body only runs when XLA traces a new static
+signature, so a counter bumped *inside* the body counts compiled
+executables exactly.  PR 1 introduced the pattern for the clustering
+kernels; this module factors the registry out so every shape-bucketed
+subsystem (clustering, the device query-eval driver) gets its own
+independent census with the same API.
+
+Keys are (kernel_name, *bucket_dims) tuples; the serving engine and the
+compile-bound tests read them to assert the cache stays at the bucket
+census instead of growing with traffic.
+"""
+from __future__ import annotations
+
+import collections
+
+
+class TraceRegistry:
+    """Counts jit traces per static-shape bucket for one subsystem."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._counts: collections.Counter = collections.Counter()
+
+    def note(self, *key) -> None:
+        """Call from inside a jitted body ⇒ runs once per traced bucket."""
+        self._counts[key] += 1
+
+    def counts(self) -> dict:
+        """{(kernel, *buckets): traces} since the last reset."""
+        return dict(self._counts)
+
+    def total(self) -> int:
+        return sum(self._counts.values())
+
+    def reset(self) -> None:
+        self._counts.clear()

@@ -1,0 +1,458 @@
+"""Device (kernel-layer) execution of per-partition query answers.
+
+Routes `per_partition_answers` through the `kernels/predicate` +
+`kernels/groupagg` Pallas kernels behind a shape-bucketed jitted driver,
+reusing PR 1's pad-and-bucket pattern (`core/clustering.py::bucket_size`)
+so the jit cache is bounded by the shape-bucket census rather than the
+number of distinct (num_clauses, radix, n_raw) combinations a workload
+produces.
+
+**Canonical interval form.**  Every clause the kernel evaluates is a
+half-open test ``lo <= x < hi`` on the float32 image of the column.  The
+bounds are chosen so the float32 row set matches the host comparison
+*bit-exactly* (`_f32_interval`): a float64 constant is snapped to the
+nearest float32 boundary on the correct side, numeric equality becomes
+``[v, nextafter(v))``, and coded-categorical equality ``[v, v+1)``.
+Predicates the form cannot express — ``in``-lists and ``!=`` — fall back
+to the host path with exact parity (the workload generator produces them
+in ~30% of queries).
+
+**Stacked batching.**  Queries sharing a shape signature
+``(C_b, G_b, radix_b, V_b)`` are stacked along the partition axis —
+Q queries × N partitions become one (Q·N, ...) kernel launch — and the
+stack depth is itself bucketed to a power of two, so a whole training
+workload compiles a handful of executables and then streams.  Padding is
+masked, never observed: padded clause slots are always-false members of a
+real OR-group, padded OR-groups get one always-true clause, padded group
+buckets receive no codes, padded value rows are zero, and padded queries
+are sliced off before unpacking.
+
+Trace-count telemetry (`TRACES`) mirrors `core/clustering.py`: the
+compile-bound test asserts the census, `bench_offline` reports it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import bucket_size
+from repro.data.table import CATEGORICAL, Table
+from repro.kernels import ops
+from repro.kernels.telemetry import TraceRegistry
+from repro.queries import engine
+from repro.queries.ir import Aggregate, Predicate, Query
+
+TRACES = TraceRegistry("query_eval")
+
+# cap on stacked f32 elements per launch (Q_b · N · max(C_b, V_b) · R)
+MAX_STACK_ELEMS = 1 << 25
+MAX_STACK_QUERIES = 64
+
+_F32_INF = np.float32(np.inf)
+
+
+# --------------------------------------------------------------------------
+# canonical interval form
+# --------------------------------------------------------------------------
+def _f32_interval(op: str, v: float) -> tuple[np.float32, np.float32] | None:
+    """Float32 (lo, hi) with {x ∈ f32 : lo <= x < hi} == {x : x op v}.
+
+    Exactness argument: numpy compares a float32 column against a Python
+    float constant under weak scalar promotion — the constant is cast to
+    float32 first — so the half-open interval only has to shift the
+    boundary one ulp past ``vf = float32(v)`` on the inclusive side.
+    """
+    vf = np.float32(v)
+    up = np.nextafter(vf, _F32_INF)
+    if op == "<":
+        return (-_F32_INF, vf)
+    if op == "<=":
+        return (-_F32_INF, up)
+    if op == ">":
+        return (up, _F32_INF)
+    if op == ">=":
+        return (vf, _F32_INF)
+    if op == "==":
+        return (vf, up)
+    return None  # "!=", "in": complement / multi-interval — host fallback
+
+
+@dataclasses.dataclass(frozen=True)
+class CanonicalPredicate:
+    """AND-of-OR-groups lowered to per-clause interval tests."""
+
+    cols: tuple[str, ...]  # per-clause source column
+    lo: np.ndarray  # (C,) float32 inclusive lower bounds
+    hi: np.ndarray  # (C,) float32 exclusive upper bounds
+    group_of: tuple[int, ...]  # per-clause OR-group index
+    num_groups: int
+
+
+def canonicalize_predicate(
+    table: Table, predicate: Predicate, cache: engine.EvalCache | None = None
+) -> CanonicalPredicate | None:
+    """Interval form of the predicate, or None if it needs the host path."""
+    cache = cache or engine.EvalCache(table)
+    cols: list[str] = []
+    lo: list[np.float32] = []
+    hi: list[np.float32] = []
+    group_of: list[int] = []
+    for g, group in enumerate(predicate.groups):
+        for clause in group.clauses:
+            if table.spec(clause.col).kind == CATEGORICAL:
+                if clause.op == "==":
+                    iv = (np.float32(clause.value), np.float32(clause.value + 1))
+                else:  # "in", "!=" and range ops on codes: host fallback
+                    return None
+            else:
+                iv = _f32_interval(clause.op, float(clause.value))
+                if iv is None or cache.has_posinf(clause.col):
+                    return None
+            cols.append(clause.col)
+            lo.append(iv[0])
+            hi.append(iv[1])
+            group_of.append(g)
+    return CanonicalPredicate(
+        tuple(cols),
+        np.asarray(lo, np.float32),
+        np.asarray(hi, np.float32),
+        tuple(group_of),
+        len(predicate.groups),
+    )
+
+
+# --------------------------------------------------------------------------
+# shape-bucket signatures
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Signature:
+    """Static shapes of one driver launch (the jit cache key, minus Q_b)."""
+
+    num_clauses: int  # C_b (0 = no-predicate driver)
+    num_groups: int  # G_b
+    radix: int  # radix_b
+    n_raw: int  # V_b
+
+    @property
+    def has_predicate(self) -> bool:
+        return self.num_clauses > 0
+
+
+@dataclasses.dataclass
+class _QueryPlan:
+    query: Query
+    canon: CanonicalPredicate
+    radix: int
+    n_raw: int
+    plans: list
+    sig: Signature
+
+
+# coarse radix levels: fine power-of-two buckets fragment a workload into
+# one-query signatures (measured: 26 sigs / 48 queries), defeating both the
+# batching and the compile bound.  Radix only sizes the output block, so
+# over-padding is cheap relative to the row pass.
+_RADIX_LEVELS = (8, 128, 512, 2048)
+
+
+def _radix_bucket(radix: int) -> int:
+    for lvl in _RADIX_LEVELS:
+        if radix <= lvl:
+            return lvl
+    return bucket_size(radix)  # generator caps radix at MAX_GROUPS = 4096
+
+
+def _signature(canon: CanonicalPredicate, radix: int, n_raw: int) -> Signature:
+    vb = max(4, bucket_size(n_raw, minimum=1))  # generator emits n_raw <= 4
+    if len(canon.cols) == 0:
+        return Signature(0, 0, _radix_bucket(radix), vb)
+    gb = bucket_size(canon.num_groups, minimum=2)
+    extra = gb - canon.num_groups  # padded OR-groups need an always-true clause each
+    cb = bucket_size(len(canon.cols) + extra, minimum=4)
+    return Signature(cb, gb, _radix_bucket(radix), vb)
+
+
+def _max_stack(table: Table, sig: Signature) -> int:
+    """Largest power-of-two query stack that fits the element budget
+    (clause gather and segment-sum output are the two bulk tensors)."""
+    per_query = table.num_partitions * (
+        table.rows_per_partition * max(sig.num_clauses, sig.n_raw, 1)
+        + sig.radix * sig.n_raw
+    )
+    q = MAX_STACK_QUERIES
+    while q > 1 and q * per_query > MAX_STACK_ELEMS:
+        q //= 2
+    return q
+
+
+def _chunks(items: list, size: int):
+    for i in range(0, len(items), size):
+        yield items[i : i + size]
+
+
+# --------------------------------------------------------------------------
+# jitted drivers (trace-counted)
+# --------------------------------------------------------------------------
+def _segment_aggregate(values, mask, codes, radix):
+    """XLA scatter-add formulation of `group_aggregate` (non-TPU lowering).
+
+    The one-hot-matmul kernel oracle materializes a (B, R, radix) tensor;
+    segment_sum is the memory-proportional form XLA lowers well on CPU.
+    """
+    b, v, r = values.shape
+    vals = (values * mask[:, None, :].astype(values.dtype)).transpose(0, 2, 1)
+    seg = (codes + jnp.arange(b, dtype=jnp.int32)[:, None] * radix).reshape(-1)
+    out = jax.ops.segment_sum(vals.reshape(b * r, v), seg, num_segments=b * radix)
+    return out.reshape(b, radix, v).transpose(0, 2, 1)  # (B, V, radix)
+
+
+def _device_inputs(stack, col_idx, coefs, mults):
+    """Gather clause columns and derive values/codes from the table stack.
+
+    Everything per-query is a small descriptor; the (n_cols+1, P, R)
+    stack is the only bulk tensor and it is already device-resident.
+    """
+    ncols1, p, r = stack.shape
+    qb, cb = col_idx.shape
+    vb = coefs.shape[1]
+    flat = stack.reshape(ncols1, p * r)
+    # aggregate components: linear projections = coefficient matmul (MXU)
+    values = jnp.einsum("qvc,cs->qvs", coefs, flat).reshape(qb, vb, p, r)
+    values = values.transpose(0, 2, 1, 3).reshape(qb * p, vb, r)
+    # mixed-radix group codes: integer-valued f32 matvec (exact below 2^24)
+    codes = jnp.einsum("qc,cs->qs", mults, flat).reshape(qb, p, r)
+    codes = jnp.round(codes).astype(jnp.int32).reshape(qb * p, r)
+    # clause columns: device gather instead of host stacking
+    x = stack[col_idx]  # (Qb, Cb, P, R)
+    x = x.transpose(0, 2, 1, 3).reshape(qb * p, cb, r)
+    return x, values, codes
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "radix", "use_ref"))
+def _eval_stacked(stack, col_idx, lo, hi, gmap, coefs, mults, num_groups, radix, use_ref):
+    qb, cb = col_idx.shape
+    p = stack.shape[1]
+    TRACES.note("eval", qb * p, cb, num_groups, radix, coefs.shape[1])
+    x, values, codes = _device_inputs(stack, col_idx, coefs, mults)
+    lo_b = jnp.repeat(lo, p, axis=0)  # (Qb*P, Cb)
+    hi_b = jnp.repeat(hi, p, axis=0)
+    gmap_b = jnp.repeat(gmap, p, axis=0)  # (Qb*P, Cb, Gb)
+    if use_ref:
+        clause = (x >= lo_b[:, :, None]) & (x < hi_b[:, :, None])  # (B, Cb, R)
+        # one-hot (disjoint) clause→group maps: OR within a group is sum>0
+        grouped = jnp.einsum("bcr,bcg->bgr", clause.astype(jnp.float32), gmap_b)
+        mask = jnp.all(grouped > 0.5, axis=1)
+        return _segment_aggregate(values, mask, codes, radix)
+    mask, _ = ops.predicate_eval_op(x, lo_b, hi_b, gmap_b, num_groups)
+    return ops.group_aggregate_op(values, mask, codes, radix)
+
+
+@functools.partial(jax.jit, static_argnames=("radix", "use_ref"))
+def _eval_stacked_nopred(stack, coefs, mults, radix, use_ref):
+    qb = coefs.shape[0]
+    p = stack.shape[1]
+    TRACES.note("eval_nopred", qb * p, radix, coefs.shape[1])
+    _, values, codes = _device_inputs(
+        stack, jnp.zeros((qb, 1), jnp.int32), coefs, mults
+    )
+    mask = jnp.ones((values.shape[0], values.shape[2]), jnp.float32)
+    if use_ref:
+        return _segment_aggregate(values, mask, codes, radix)
+    return ops.group_aggregate_op(values, mask, codes, radix)
+
+
+# --------------------------------------------------------------------------
+# per-query descriptors (small host arrays; the stack stays on device)
+# --------------------------------------------------------------------------
+def _descriptor(plan: _QueryPlan, cache: engine.EvalCache):
+    """(col_idx (C_b,), lo, hi, gmap (C_b,G_b), coefs (V_b,n_cols+1),
+    mults (n_cols+1,)) — everything the driver needs besides the stack."""
+    sig, canon, table = plan.sig, plan.canon, cache.table
+    cb, gb, vb = sig.num_clauses, sig.num_groups, sig.n_raw
+    c, g = len(canon.cols), canon.num_groups
+    ncols1 = cache.ones_index + 1
+
+    col_idx = np.zeros(max(cb, 1), np.int32)
+    lo = np.full(max(cb, 1), np.float32(1.0), np.float32)  # always-false slot
+    hi = np.full(max(cb, 1), np.float32(-1.0), np.float32)
+    gmap = np.zeros((max(cb, 1), max(gb, 1)), np.float32)
+    for j, col in enumerate(canon.cols):
+        col_idx[j] = cache.col_index[col]
+        lo[j] = canon.lo[j]
+        hi[j] = canon.hi[j]
+        gmap[j, canon.group_of[j]] = 1.0
+    # padded OR-groups: one always-true clause each (ones column ∈ [0.5, 1.5))
+    for k in range(gb - g):
+        col_idx[c + k] = cache.ones_index
+        lo[c + k] = np.float32(0.5)
+        hi[c + k] = np.float32(1.5)
+        gmap[c + k, g + k] = 1.0
+    # remaining padded clause slots stay always-false, parked in group 0
+    gmap[c + (gb - g) :, 0] = 1.0
+
+    coefs = np.zeros((vb, ncols1), np.float32)
+    coefs[0, cache.ones_index] = 1.0  # raw component 0 = passing-row count
+    k = 1
+    for agg in plan.query.aggregates:
+        if agg.kind == "count":
+            continue
+        for coef, col in agg.terms:
+            coefs[k, cache.col_index[col]] += np.float32(coef)
+        k += 1
+
+    mults = np.zeros(ncols1, np.float32)
+    mult = 1
+    for name in reversed(plan.query.groupby):
+        mults[cache.col_index[name]] = np.float32(mult)
+        mult *= table.spec(name).cardinality
+    return col_idx, lo, hi, gmap, coefs, mults
+
+
+def _run_chunk(
+    chunk: list[_QueryPlan], cache: engine.EvalCache, use_ref: bool
+) -> list[engine.PartitionAnswers]:
+    sig = chunk[0].sig
+    table = cache.table
+    n = table.num_partitions
+    qb = bucket_size(len(chunk), minimum=1)
+    ncols1 = cache.ones_index + 1
+    stack = cache.device_stack()
+
+    col_idx = np.zeros((qb, max(sig.num_clauses, 1)), np.int32)
+    lo = np.full((qb, max(sig.num_clauses, 1)), np.float32(1.0), np.float32)
+    hi = np.full((qb, max(sig.num_clauses, 1)), np.float32(-1.0), np.float32)
+    gmap = np.zeros(
+        (qb, max(sig.num_clauses, 1), max(sig.num_groups, 1)), np.float32
+    )
+    coefs = np.zeros((qb, sig.n_raw, ncols1), np.float32)
+    mults = np.zeros((qb, ncols1), np.float32)
+    for i, plan in enumerate(chunk):
+        col_idx[i], lo[i], hi[i], gmap[i], coefs[i], mults[i] = _descriptor(plan, cache)
+
+    if sig.has_predicate:
+        out = _eval_stacked(
+            stack, col_idx, lo, hi, gmap, coefs, mults,
+            sig.num_groups, sig.radix, use_ref,
+        )
+    else:
+        out = _eval_stacked_nopred(stack, coefs, mults, sig.radix, use_ref)
+
+    out = np.asarray(out, np.float64).reshape(qb, n, sig.n_raw, sig.radix)
+    answers = []
+    for i, plan in enumerate(chunk):
+        raw = out[i, :, : plan.n_raw, : plan.radix].transpose(0, 2, 1)
+        answers.append(engine._answers_from_raw(plan.query, raw, plan.plans))
+    return answers
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+def _plan_workload(table: Table, queries: list[Query], cache: engine.EvalCache):
+    """→ ({signature: [(index, plan)]}, [(index, query)] host fallbacks)."""
+    grouped: dict[Signature, list[tuple[int, _QueryPlan]]] = {}
+    fallback: list[tuple[int, Query]] = []
+    for i, q in enumerate(queries):
+        canon = canonicalize_predicate(table, q.predicate, cache)
+        if canon is None:
+            fallback.append((i, q))
+            continue
+        radix = engine.group_radix_checked(table, q.groupby)
+        plans, n_raw = engine.plan_aggregates(q.aggregates)
+        sig = _signature(canon, radix, n_raw)
+        grouped.setdefault(sig, []).append(
+            (i, _QueryPlan(q, canon, radix, n_raw, plans, sig))
+        )
+    return grouped, fallback
+
+
+def eval_workload(
+    table: Table,
+    queries: list[Query],
+    cache: engine.EvalCache | None = None,
+    use_ref: bool | None = None,
+) -> list[engine.PartitionAnswers]:
+    """Kernel-backed A_{g,i} for a workload; order matches the input."""
+    from repro.backends import kernels_use_ref
+
+    cache = cache or engine.EvalCache(table)
+    use_ref = kernels_use_ref(use_ref)
+    grouped, fallback = _plan_workload(table, queries, cache)
+    out: list[engine.PartitionAnswers | None] = [None] * len(queries)
+    for i, q in fallback:  # in-lists / != : exact-parity host path
+        out[i] = engine._host_answers(table, q, cache)
+    for sig, entries in grouped.items():
+        for chunk in _chunks(entries, _max_stack(table, sig)):
+            answers = _run_chunk([p for _, p in chunk], cache, use_ref)
+            for (i, _), ans in zip(chunk, answers):
+                out[i] = ans
+    return out
+
+
+def predicate_mask_device(
+    table: Table,
+    predicate: Predicate,
+    cache: engine.EvalCache | None = None,
+    use_ref: bool | None = None,
+) -> np.ndarray | None:
+    """Kernel row mask (N, R) bool, or None if the predicate needs the host
+    path — the bit-parity surface the edge-case sweep tests directly."""
+    from repro.backends import kernels_use_ref
+
+    cache = cache or engine.EvalCache(table)
+    canon = canonicalize_predicate(table, predicate, cache)
+    if canon is None:
+        return None
+    n, r = table.num_partitions, table.rows_per_partition
+    if len(canon.cols) == 0:
+        return np.ones((n, r), bool)
+    plans, n_raw = engine.plan_aggregates((Aggregate("count"),))
+    sig = _signature(canon, 1, n_raw)
+    plan = _QueryPlan(Query((Aggregate("count"),), predicate), canon, 1, n_raw, plans, sig)
+    col_idx, lo, hi, gmap, _, _ = _descriptor(plan, cache)
+    names = [s.name for s in table.schema]
+    cols = np.stack(
+        [
+            cache.f32(names[i]) if i < cache.ones_index
+            else np.ones((n, r), np.float32)
+            for i in col_idx
+        ],
+        axis=1,
+    )  # (N, C_b, R), gathered host-side — no device round-trip
+    mask, _ = ops.predicate_eval_op(
+        jnp.asarray(cols),
+        jnp.asarray(np.broadcast_to(lo, (n, lo.shape[0]))),
+        jnp.asarray(np.broadcast_to(hi, (n, hi.shape[0]))),
+        jnp.asarray(gmap),
+        sig.num_groups,
+        use_ref=kernels_use_ref(use_ref),
+    )
+    return np.asarray(mask) > 0.5
+
+
+def workload_census(
+    table: Table, queries: list[Query], cache: engine.EvalCache | None = None
+) -> set[tuple]:
+    """Expected trace keys for a workload — the compile-count upper bound.
+
+    Mirrors `eval_workload`'s grouping exactly, so
+    ``TRACES.total() <= len(workload_census(...))`` is the acceptance
+    assertion for bounded compiles.
+    """
+    cache = cache or engine.EvalCache(table)
+    grouped, _ = _plan_workload(table, queries, cache)
+    keys: set[tuple] = set()
+    for sig, entries in grouped.items():
+        for chunk in _chunks(entries, _max_stack(table, sig)):
+            b = bucket_size(len(chunk), minimum=1) * table.num_partitions
+            if sig.has_predicate:
+                keys.add(
+                    ("eval", b, sig.num_clauses, sig.num_groups, sig.radix, sig.n_raw)
+                )
+            else:
+                keys.add(("eval_nopred", b, sig.radix, sig.n_raw))
+    return keys

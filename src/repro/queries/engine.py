@@ -5,10 +5,17 @@ the quantity the whole system is built around: truth labels for picker
 training, per-partition contributions, and the weighted estimator all read
 from it.
 
-Two execution paths with identical semantics:
-  * a vectorized host path (numpy; used for training-data generation), and
-  * a jitted JAX path with static shapes (used by the AQP executor and as
-    the oracle for the `groupagg`/`predicate` Pallas kernels).
+Two execution backends with identical semantics (see `repro.backends`):
+  * ``backend="host"``   — vectorized numpy (bincount segment sums);
+  * ``backend="device"`` — the kernel layer: `queries.device` routes the
+    predicate + group-aggregate passes through the Pallas kernels behind
+    a shape-bucketed jitted driver, stacking whole query batches into one
+    device pass.  Predicates outside the canonical interval form
+    (``in``-lists, ``!=``) fall back to the host path with exact parity.
+
+`EvalCache` carries the workload-invariant intermediates (group codes per
+group-by tuple, per-column float casts, per-aggregate projections) so a
+training workload or serving batch never recomputes them per query.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ from functools import partial
 import jax
 import numpy as np
 
+from repro.backends import resolve_backend
 from repro.data.table import CATEGORICAL, Table
 from repro.queries.ir import Aggregate, Predicate, Query
 
@@ -67,6 +75,20 @@ def group_radix(table: Table, groupby: tuple[str, ...]) -> int:
     for name in groupby:
         g *= table.spec(name).cardinality
     return g
+
+
+def group_radix_checked(table: Table, groupby: tuple[str, ...]) -> int:
+    """`group_radix` with `group_codes`'s validation, without materializing
+    the (P, R) code arrays — the device path derives codes on-device."""
+    radix = 1
+    for name in groupby:
+        spec = table.spec(name)
+        if spec.kind != CATEGORICAL:
+            raise ValueError(f"group-by on non-categorical column {name}")
+        radix *= spec.cardinality
+    if radix > MAX_GROUPS:
+        raise ValueError(f"group radix {radix} exceeds MAX_GROUPS")
+    return radix
 
 
 def group_codes(table: Table, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
@@ -178,18 +200,118 @@ def query_key(query: Query) -> str:
     return query.describe()
 
 
+# --------------------------------------------------------------------------
+# workload-invariant evaluation cache
+# --------------------------------------------------------------------------
+class EvalCache:
+    """Per-table cache of the intermediates shared across a workload.
+
+    Group codes depend only on the group-by tuple, float casts only on the
+    column, and projections only on the aggregate's term list — a training
+    workload of 100 queries re-derives each a handful of times at most.
+    The device driver additionally reads the float32 column images from
+    here so the clause stacks share one cast per column.
+    """
+
+    def __init__(self, table: Table):
+        self.table = table
+        self._codes: dict[tuple[str, ...], tuple[np.ndarray, int]] = {}
+        self._f64: dict[str, np.ndarray] = {}
+        self._f32: dict[str, np.ndarray] = {}
+        self._proj: dict[tuple, np.ndarray] = {}
+        self._posinf: dict[str, bool] = {}
+        self._stack = None  # device-resident (n_cols+1, P, R) column stack
+        self.col_index = {s.name: i for i, s in enumerate(table.schema)}
+        self.ones_index = len(table.schema)
+        self.codes_builds = 0
+        self.cast_builds = 0
+
+    def group_codes(self, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
+        hit = self._codes.get(groupby)
+        if hit is None:
+            self.codes_builds += 1
+            hit = self._codes[groupby] = group_codes(self.table, groupby)
+        return hit
+
+    def f64(self, col: str) -> np.ndarray:
+        hit = self._f64.get(col)
+        if hit is None:
+            self.cast_builds += 1
+            hit = self._f64[col] = self.table.columns[col].astype(np.float64)
+        return hit
+
+    def has_posinf(self, col: str) -> bool:
+        """+inf rows defeat the half-open interval form (`x < hi` can never
+        admit x = inf), so clauses on such columns take the host path."""
+        hit = self._posinf.get(col)
+        if hit is None:
+            hit = self._posinf[col] = bool(np.isposinf(self.table.columns[col]).any())
+        return hit
+
+    def f32(self, col: str) -> np.ndarray:
+        hit = self._f32.get(col)
+        if hit is None:
+            data = self.table.columns[col]
+            hit = self._f32[col] = (
+                data if data.dtype == np.float32 else data.astype(np.float32)
+            )
+        return hit
+
+    def device_stack(self) -> jax.Array:
+        """(n_cols+1, P, R) float32 column stack, resident on device.
+
+        The trailing pseudo-column is all-ones: the count component and
+        always-true padding clauses read it, so the device driver's only
+        per-query inputs are small descriptors (indices / bounds /
+        coefficients) — the table itself ships once per EvalCache.
+        """
+        if self._stack is None:
+            import jax.numpy as jnp
+
+            t = self.table
+            rows = [self.f32(s.name) for s in t.schema]
+            rows.append(np.ones((t.num_partitions, t.rows_per_partition), np.float32))
+            self._stack = jnp.asarray(np.stack(rows))
+        return self._stack
+
+    # distinct aggregate term tuples are unbounded across a serving
+    # lifetime; each projection is a (P, R) float64 array, so the cache
+    # is a small LRU rather than grow-forever like the cheap code caches
+    PROJ_CAPACITY = 32
+
+    def projection(self, agg: Aggregate) -> np.ndarray:
+        if len(agg.terms) == 1 and agg.terms[0][0] == 1.0:
+            return self.f64(agg.terms[0][1])  # identity projection: alias
+        key = agg.terms
+        hit = self._proj.pop(key, None)
+        if hit is None:
+            hit = np.zeros(
+                (self.table.num_partitions, self.table.rows_per_partition), np.float64
+            )
+            for coef, col in agg.terms:
+                hit += coef * self.f64(col)
+        self._proj[key] = hit  # re-insert = most recently used
+        while len(self._proj) > self.PROJ_CAPACITY:
+            self._proj.pop(next(iter(self._proj)))
+        return hit
+
+
 class AnswerStore:
     """Bounded LRU cache of PartitionAnswers keyed by `query_key`.
 
     One exact per-partition evaluation per distinct query text — repeated
     queries in a serving batch (dashboards re-issuing the same panel) hit
-    the cache instead of rescanning the table.
+    the cache instead of rescanning the table.  Misses in `get_batch` are
+    evaluated together through `per_partition_answers_batch`, so a cold
+    serving batch costs one stacked device pass, not Q host rescans.
     """
 
-    def __init__(self, table: Table, capacity: int = 256):
+    def __init__(self, table: Table, capacity: int = 256, backend: str | None = None):
         self.table = table
         self.capacity = int(capacity)
+        self.backend = backend
         self._cache: dict[str, PartitionAnswers] = {}
+        self._eval_cache = EvalCache(table)
         self.hits = 0
         self.misses = 0
 
@@ -201,19 +323,60 @@ class AnswerStore:
             self._cache[key] = hit  # re-insert = most recently used
             return hit
         self.misses += 1
-        ans = per_partition_answers(self.table, query)
+        ans = per_partition_answers(
+            self.table, query, backend=self.backend, cache=self._eval_cache
+        )
+        self._insert(key, ans)
+        return ans
+
+    def get_batch(self, queries: list[Query]) -> list[PartitionAnswers]:
+        """Answers for a batch; all misses evaluated in one stacked pass."""
+        keys = [query_key(q) for q in queries]
+        missing: dict[str, Query] = {}
+        for q, key in zip(queries, keys):
+            if key not in self._cache and key not in missing:
+                missing[key] = q
+        fresh: dict[str, PartitionAnswers] = {}
+        if missing:
+            evaluated = per_partition_answers_batch(
+                self.table,
+                list(missing.values()),
+                backend=self.backend,
+                cache=self._eval_cache,
+            )
+            fresh = dict(zip(missing.keys(), evaluated))
+        out: list[PartitionAnswers] = []
+        for key in keys:
+            hit = self._cache.pop(key, None)
+            if hit is not None:
+                self.hits += 1
+            else:
+                self.misses += 1
+                hit = fresh[key]
+            self._insert(key, hit)
+            out.append(hit)
+        return out
+
+    def _insert(self, key: str, ans: PartitionAnswers) -> None:
         self._cache[key] = ans
         while len(self._cache) > self.capacity:
             self._cache.pop(next(iter(self._cache)))
-        return ans
 
     def __len__(self) -> int:
         return len(self._cache)
 
 
-def per_partition_answers(table: Table, query: Query) -> PartitionAnswers:
+def _answers_from_raw(
+    query: Query, raw: np.ndarray, plans: list[_AggPlan]
+) -> PartitionAnswers:
+    """(N, radix, n_raw) dense raw sums → occupied-group PartitionAnswers."""
+    occupied = np.flatnonzero(raw[:, :, 0].sum(axis=0) > 0)
+    return PartitionAnswers(query, occupied, raw[:, occupied, :], plans)
+
+
+def _host_answers(table: Table, query: Query, cache: EvalCache) -> PartitionAnswers:
     mask = predicate_mask(table, query.predicate)
-    codes, radix = group_codes(table, query.groupby)
+    codes, radix = cache.group_codes(query.groupby)
     n, r = mask.shape
     plans, n_raw = plan_aggregates(query.aggregates)
 
@@ -225,13 +388,45 @@ def per_partition_answers(table: Table, query: Query) -> PartitionAnswers:
     for agg in query.aggregates:
         if agg.kind == "count":
             continue
-        vals = (_projection(table, agg).reshape(-1)) * m
+        vals = (cache.projection(agg).reshape(-1)) * m
         raw[:, k] = np.bincount(seg, weights=vals, minlength=n * radix)
         k += 1
     raw = raw.reshape(n, radix, n_raw)
+    return _answers_from_raw(query, raw, plans)
 
-    occupied = np.flatnonzero(raw[:, :, 0].sum(axis=0) > 0)
-    return PartitionAnswers(query, occupied, raw[:, occupied, :], plans)
+
+def per_partition_answers(
+    table: Table,
+    query: Query,
+    backend: str | None = None,
+    cache: EvalCache | None = None,
+) -> PartitionAnswers:
+    """Exact A_{g,i} for one query; `backend` selects host numpy or the
+    kernel-layer device path (default: `repro.backends.default_backend`)."""
+    return per_partition_answers_batch(table, [query], backend=backend, cache=cache)[0]
+
+
+def per_partition_answers_batch(
+    table: Table,
+    queries: list[Query],
+    backend: str | None = None,
+    cache: EvalCache | None = None,
+    use_ref: bool | None = None,
+) -> list[PartitionAnswers]:
+    """A_{g,i} for a whole workload — the offline hot path.
+
+    The device backend groups queries by shape-bucket signature and stacks
+    each group along the partition axis so a training workload or serving
+    batch is a handful of kernel launches; the host backend shares the
+    `EvalCache` intermediates across the loop.
+    """
+    backend = resolve_backend(backend)
+    cache = cache or EvalCache(table)
+    if backend == "device":
+        from repro.queries import device
+
+        return device.eval_workload(table, queries, cache=cache, use_ref=use_ref)
+    return [_host_answers(table, q, cache) for q in queries]
 
 
 # --------------------------------------------------------------------------

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core import clustering
 from repro.core.picker import PS3Picker, Selection
+from repro.queries import device as query_device
 from repro.queries.engine import AnswerStore, PartitionAnswers
 from repro.queries.ir import Query
 
@@ -68,13 +69,21 @@ class BatchPicker:
     the batched feature pass, the answer LRU, and telemetry.
     """
 
-    def __init__(self, picker: PS3Picker, answer_capacity: int = 256):
+    def __init__(
+        self,
+        picker: PS3Picker,
+        answer_capacity: int = 256,
+        backend: str | None = None,
+    ):
         self.picker = picker
-        self.answers = AnswerStore(picker.table, capacity=answer_capacity)
+        self.answers = AnswerStore(
+            picker.table, capacity=answer_capacity, backend=backend
+        )
         self.stats = ServingStats()
         # census baseline: report only buckets traced after this instance
         # was created, not process-wide history (e.g. training-time picks)
         self._bucket_base = dict(clustering.trace_counts())
+        self._eval_base = dict(query_device.TRACES.counts())
 
     # ---- picking ----------------------------------------------------------
     def pick_batch(
@@ -98,14 +107,20 @@ class BatchPicker:
     def answer_batch(
         self, queries: Sequence[Query], budget: int, **pick_kw
     ) -> list[tuple[np.ndarray, Selection]]:
-        """(estimate Ã_g, Selection) per query; exact answers are cached."""
+        """(estimate Ã_g, Selection) per query; exact answers are cached.
+
+        Cache misses for the whole batch are evaluated in one stacked pass
+        (`AnswerStore.get_batch`), so a cold batch is a handful of kernel
+        launches instead of Q table rescans.
+        """
         queries = list(queries)  # pick_batch would otherwise drain an iterator
         selections = self.pick_batch(queries, budget, **pick_kw)
         hits0, misses0 = self.answers.hits, self.answers.misses
-        out = []
-        for q, sel in zip(queries, selections):
-            ans = self.answers.get(q)
-            out.append((ans.estimate(sel.ids, sel.weights), sel))
+        answers = self.answers.get_batch(queries)
+        out = [
+            (ans.estimate(sel.ids, sel.weights), sel)
+            for ans, sel in zip(answers, selections)
+        ]
         self.stats.answer_hits += self.answers.hits - hits0
         self.stats.answer_misses += self.answers.misses - misses0
         return out
@@ -122,12 +137,17 @@ class BatchPicker:
             for key, count in clustering.trace_counts().items()
         }
         buckets = {k: c for k, c in buckets.items() if c > 0}
+        eval_compiles = sum(
+            count - self._eval_base.get(key, 0)
+            for key, count in query_device.TRACES.counts().items()
+        )
         return {
             **self.stats.as_dict(),
             "shape_buckets": len(buckets),
             "bucket_traces": {
                 f"{kern}:n{nb}:k{kb}": c for (kern, nb, kb), c in buckets.items()
             },
+            "eval_compiles": eval_compiles,  # device query-eval driver traces
         }
 
 

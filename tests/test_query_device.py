@@ -1,0 +1,203 @@
+"""Device (kernel-backed) query evaluation vs the host path.
+
+Bit-parity on predicate masks, group keys, and counts; float32-tight
+parity on value sums — across the edge cases that break padding and
+masking logic: row counts not a multiple of the 128 lane width, constant
+columns, negative columns, cardinality-1 categoricals, zero-row
+predicates, and queries with no group-by.  Plus the compile-bound
+property: a 100-query workload traces at most one executable per
+shape-bucket census entry.
+"""
+import numpy as np
+import pytest
+
+from repro.data.table import CATEGORICAL, NUMERIC, ColumnSpec, Table
+from repro.data.datasets import make_dataset
+from repro.queries import device
+from repro.queries.engine import (
+    EvalCache,
+    per_partition_answers,
+    per_partition_answers_batch,
+    predicate_mask,
+)
+from repro.queries.generator import WorkloadSpec
+from repro.queries.ir import Aggregate, Clause, OrGroup, Predicate, Query
+
+
+def edge_table(parts: int = 3, rows: int = 200, seed: int = 0) -> Table:
+    """Rows % 128 != 0, constant / negative columns, cardinality-1 cat."""
+    rng = np.random.default_rng(seed)
+    schema = (
+        ColumnSpec("x", NUMERIC),
+        ColumnSpec("pos", NUMERIC, positive=True),
+        ColumnSpec("const", NUMERIC),
+        ColumnSpec("neg", NUMERIC),
+        ColumnSpec("one", CATEGORICAL, cardinality=1, groupable=True),
+        ColumnSpec("g", CATEGORICAL, cardinality=5, groupable=True),
+    )
+    cols = {
+        "x": (rng.normal(size=(parts, rows)) * 3).astype(np.float32),
+        "pos": (rng.gamma(2.0, 1.0, size=(parts, rows)) + 0.1).astype(np.float32),
+        "const": np.full((parts, rows), 2.5, np.float32),
+        "neg": (-np.abs(rng.normal(size=(parts, rows))) - 0.5).astype(np.float32),
+        "one": np.zeros((parts, rows), np.int32),
+        "g": rng.integers(0, 5, size=(parts, rows)).astype(np.int32),
+    }
+    return Table(schema, cols, name="edge")
+
+
+def edge_queries() -> list[Query]:
+    count = Aggregate("count")
+    sum_x = Aggregate("sum", ((1.0, "x"),))
+    avg_pos = Aggregate("avg", ((1.0, "pos"),))
+    proj = Aggregate("sum", ((1.0, "pos"), (-1.0, "x")))
+    return [
+        Query((count,)),  # no predicate, no group-by
+        Query((count, sum_x), Predicate.conjunction([Clause("x", ">", 0.0)]), ("g",)),
+        Query((sum_x,), Predicate.conjunction([Clause("x", ">", 1e9)]), ("g",)),  # 0 rows
+        Query((avg_pos,), Predicate.conjunction([Clause("neg", "<=", -1.0)]), ("one",)),
+        Query((proj, count), Predicate.conjunction([Clause("pos", "<", 1.7)]), ("one", "g")),
+        Query((count,), Predicate((OrGroup((Clause("x", "<", -1.0), Clause("g", "==", 2))),))),
+        Query((count,), Predicate.conjunction([Clause("const", "<=", 2.5)])),  # all rows
+        Query((sum_x,), Predicate.conjunction([Clause("const", "<", 2.5)])),  # no rows
+        Query((count,), Predicate.conjunction([Clause("x", "==", 0.1)])),  # v ∉ f32
+        Query((avg_pos, sum_x, count), Predicate.conjunction(
+            [Clause("one", "==", 0), Clause("x", ">=", -0.5)]), ("g",)),
+    ]
+
+
+def assert_answers_match(host, dev, exact: bool = False):
+    np.testing.assert_array_equal(host.group_keys, dev.group_keys)
+    np.testing.assert_array_equal(host.raw[:, :, 0], dev.raw[:, :, 0])  # counts
+    if exact:
+        np.testing.assert_array_equal(host.raw, dev.raw)
+    else:
+        np.testing.assert_allclose(dev.raw, host.raw, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_ref", [True, False], ids=["xla-ref", "pallas"])
+def test_edge_case_parity_sweep(use_ref):
+    table = edge_table()
+    cache = EvalCache(table)
+    queries = edge_queries()
+    host = per_partition_answers_batch(table, queries, backend="host", cache=cache)
+    dev = device.eval_workload(table, queries, cache=cache, use_ref=use_ref)
+    for h, d in zip(host, dev):
+        assert_answers_match(h, d)
+
+
+@pytest.mark.parametrize("use_ref", [True, False], ids=["xla-ref", "pallas"])
+def test_predicate_mask_bit_parity(use_ref):
+    table = edge_table(seed=1)
+    cache = EvalCache(table)
+    checked = 0
+    for q in edge_queries():
+        m = device.predicate_mask_device(table, q.predicate, cache, use_ref=use_ref)
+        if m is not None:
+            np.testing.assert_array_equal(m, predicate_mask(table, q.predicate))
+            checked += 1
+    assert checked >= 8
+
+
+def test_interval_canonicalization_bit_exact():
+    """{x: lo <= x < hi} must equal the host comparison for f32 data and
+    arbitrary float64 constants, including non-representable boundaries."""
+    rng = np.random.default_rng(2)
+    x = (rng.normal(size=4096) * 10).astype(np.float32)
+    x[:16] = np.float32(0.1)  # exact hits on a non-representable-ish value
+    consts = [0.1, float(np.float32(0.1)), -3.0, float(x[100]), 1e-40, 17.3]
+    for v in consts:
+        for op, npop in [("<", np.less), ("<=", np.less_equal),
+                         (">", np.greater), (">=", np.greater_equal)]:
+            lo, hi = device._f32_interval(op, v)
+            got = (x >= lo) & (x < hi)
+            np.testing.assert_array_equal(got, npop(x, v), err_msg=f"{op} {v}")
+        lo, hi = device._f32_interval("==", v)
+        np.testing.assert_array_equal((x >= lo) & (x < hi), x == v, err_msg=f"== {v}")
+
+
+def test_fallback_predicates_exactly_match_host():
+    """in-lists and != route through the host path — bitwise identical."""
+    table = edge_table(seed=3)
+    cache = EvalCache(table)
+    queries = [
+        Query((Aggregate("count"),),
+              Predicate.conjunction([Clause("g", "in", (0, 3))]), ("g",)),
+        Query((Aggregate("sum", ((1.0, "x"),)),),
+              Predicate.conjunction([Clause("g", "!=", 1)])),
+        Query((Aggregate("count"),),
+              Predicate.conjunction([Clause("x", "!=", 0.5)])),
+    ]
+    for q in queries:
+        assert device.canonicalize_predicate(table, q.predicate) is None
+        host = per_partition_answers(table, q, backend="host", cache=cache)
+        dev = per_partition_answers(table, q, backend="device", cache=cache)
+        assert_answers_match(host, dev, exact=True)
+
+
+def test_posinf_column_falls_back_to_host():
+    """`x < hi` can never admit x = +inf, so clauses on columns with inf
+    rows must take the host path — and still match it exactly."""
+    table = edge_table(seed=8)
+    table.columns["x"][0, :5] = np.inf
+    cache = EvalCache(table)
+    q = Query((Aggregate("count"),), Predicate.conjunction([Clause("x", ">", 0.0)]), ("g",))
+    assert device.canonicalize_predicate(table, q.predicate, cache) is None
+    host = per_partition_answers(table, q, backend="host", cache=cache)
+    dev = per_partition_answers(table, q, backend="device", cache=cache)
+    assert_answers_match(host, dev, exact=True)
+    # clauses on the clean columns still take the device path
+    clean = Predicate.conjunction([Clause("pos", ">", 1.0)])
+    assert device.canonicalize_predicate(table, clean, cache) is not None
+
+
+@pytest.mark.slow
+def test_workload_parity_randomized():
+    """Generator workload (mixed canonical + fallback) — batch device path
+    vs the per-query host path, on both kernel lowerings."""
+    table = make_dataset("tpch", num_partitions=8, rows_per_partition=384)
+    cache = EvalCache(table)
+    queries = WorkloadSpec(table, seed=21).sample_workload(24)
+    host = per_partition_answers_batch(table, queries, backend="host", cache=cache)
+    for use_ref in (True, False):
+        dev = device.eval_workload(table, queries, cache=cache, use_ref=use_ref)
+        for h, d in zip(host, dev):
+            assert_answers_match(h, d)
+
+
+def test_compile_count_bounded_by_census():
+    """A 100-query training workload compiles at most one executable per
+    shape-bucket census entry — the acceptance criterion for the driver."""
+    table = make_dataset("kdd", num_partitions=16, rows_per_partition=256)
+    cache = EvalCache(table)
+    queries = WorkloadSpec(table, seed=5).sample_workload(100)
+    census = device.workload_census(table, queries, cache)
+    device.TRACES.reset()
+    device.eval_workload(table, queries, cache=cache)
+    traces = device.TRACES.counts()
+    assert set(traces) <= census
+    assert device.TRACES.total() <= len(census)
+    assert device.TRACES.total() < len(queries) / 2
+    # warm re-run: zero new traces
+    device.eval_workload(table, queries, cache=cache)
+    assert device.TRACES.total() <= len(census)
+
+
+def test_eval_cache_amortizes_workload():
+    """Group codes and float casts are built once per distinct key, not
+    once per query (the build_training_data host-path fix)."""
+    table = make_dataset("aria", num_partitions=8, rows_per_partition=256)
+    queries = WorkloadSpec(table, seed=11).sample_workload(40)
+    cache = EvalCache(table)
+    per_partition_answers_batch(table, queries, backend="host", cache=cache)
+    distinct_groupbys = len({q.groupby for q in queries})
+    assert cache.codes_builds <= distinct_groupbys
+    assert cache.cast_builds <= len(table.schema)
+
+
+def test_single_query_entry_point_device():
+    table = edge_table(seed=4)
+    q = Query((Aggregate("count"),), Predicate.conjunction([Clause("x", "<", 0.0)]), ("g",))
+    host = per_partition_answers(table, q, backend="host")
+    dev = per_partition_answers(table, q, backend="device")
+    assert_answers_match(host, dev)

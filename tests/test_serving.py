@@ -154,6 +154,22 @@ def test_answer_store_lru_eviction(served):
     assert len({query_key(q) for q in queries}) == 6
 
 
+def test_answer_store_get_batch_matches_get(served):
+    """Batched miss evaluation preserves sequential get() semantics —
+    same answers, same hit/miss accounting, duplicates hit in-batch."""
+    table, _ = served
+    queries = WorkloadSpec(table, seed=29).sample_workload(3)
+    batch = [queries[0], queries[1], queries[0], queries[2]]
+    a = AnswerStore(table, capacity=8)
+    got = a.get_batch(batch)
+    b = AnswerStore(table, capacity=8)
+    ref = [b.get(q) for q in batch]
+    assert (a.hits, a.misses) == (b.hits, b.misses) == (1, 3)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(g.group_keys, r.group_keys)
+        np.testing.assert_allclose(g.raw, r.raw)
+
+
 def test_pick_stream_chunks(served):
     table, art = served
     queries = WorkloadSpec(table, seed=19).sample_workload(7)
