@@ -19,9 +19,8 @@ committed baseline in CI.
 from __future__ import annotations
 
 import os
-import time
 
-from benchmarks.common import write_result
+from benchmarks.common import timed as _timed, timed_min as _timed_min, write_result
 from repro.backends import default_backend
 from repro.core.picker import PickerConfig, build_training_data, train_picker
 from repro.core.features import FeatureBuilder
@@ -37,22 +36,6 @@ FULL = os.environ.get("BENCH_FULL", "0") == "1"
 N_PARTS = 64 if QUICK else (128 if not FULL else 256)
 ROWS = 512 if QUICK else (1024 if not FULL else 2048)
 N_QUERIES = 48 if QUICK else 100
-
-
-def _timed(fn, *args, **kw):
-    t0 = time.perf_counter()
-    out = fn(*args, **kw)
-    return out, time.perf_counter() - t0
-
-
-def _timed_min(reps, fn, *args, **kw):
-    """Best-of-N wall time — this container's scheduler is noisy."""
-    best = float("inf")
-    out = None
-    for _ in range(reps):
-        out, t = _timed(fn, *args, **kw)
-        best = min(best, t)
-    return out, best
 
 
 def run(datasets=("tpch", "kdd")):

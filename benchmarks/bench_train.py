@@ -1,0 +1,140 @@
+"""GBDT fit throughput, host vs device backend (ISSUE 3).
+
+After PR 2 moved label generation to batched device eval, funnel fitting
+dominates `train_picker` wall time — this benchmark tracks it the way
+`bench_offline` tracks the label/sketch passes.  The problem is sized like
+one funnel regressor (rows = train queries × partitions, the funnel's
+rowsample/colsample), fit on both backends:
+
+  * host: the canonical-f32 numpy fit (`np.add.at` histograms),
+  * device: `kernels/tree_hist` + the jitted per-tree split-search program
+    (cold = includes the one compile per shape bucket, then warm min-of-N),
+    with the `gbdt.TRACES` compile census — if shape bucketing regresses,
+    `fit_compiles` grows toward the tree count instead of the census.
+
+Also times quantile binning (`Binner.transform`): the vectorized
+branchless bisect vs the old per-feature `searchsorted` loop, in both
+regimes it runs in — the serve-time shape (a candidate set per query,
+`funnel.classify`), where the vectorized pass wins, and the tall fit-time
+matrix, where C `searchsorted`'s cache-resident binary search keeps a
+~20% edge per call (reported, not gated; the fit profile win there comes
+from binning once per funnel instead of once per model —
+`train_funnel` now shares codes across its k fits).
+
+Regression-gated metrics (`benchmarks/check_regression.py`): the
+within-run ratio `fit_speedup_warm` (machine speed cancels) and the
+deterministic `fit_compiles`.  Binning ratios are reported for context
+but not gated — their microsecond basis times sit below the gate's
+scheduler-noise floor.  Absolute wall times are context only.  On CPU
+the device path runs XLA's single-threaded scatter and is expected to
+trail numpy (same gap as bench_offline — see ROADMAP "CPU scatter gap");
+the ≥3× fit-speedup target is TPU-conditional.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import timed_min as _timed_min, write_result
+from repro.backends import default_backend
+from repro.core import gbdt
+from repro.core.gbdt import Binner, fit_census, fit_gbdt
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+# quick sizes are chosen so the host fit stays above check_regression's
+# MIN_BASIS_SECONDS — otherwise the speedup gate self-skips as noise
+N_ROWS = 4096 if QUICK else (6144 if not FULL else 12800)
+N_FEATS = 32 if QUICK else (48 if not FULL else 64)
+N_TREES = 32 if QUICK else (40 if not FULL else 60)
+DEPTH = 5
+ROWSAMPLE, COLSAMPLE = 0.5, 0.7  # the funnel's training config
+
+
+def _binning_loop(binner: Binner, x: np.ndarray) -> np.ndarray:
+    """The pre-vectorization per-feature loop (timing reference only)."""
+    out = np.empty(x.shape, np.uint8)
+    for f in range(x.shape[1]):
+        out[:, f] = np.searchsorted(binner.edges[f], x[:, f], side="right")
+    return out
+
+
+def run():
+    rng = np.random.default_rng(1234)
+    x = rng.normal(size=(N_ROWS, N_FEATS))
+    y = x @ rng.normal(size=N_FEATS) + np.sin(3 * x[:, 0]) * 2
+    kw = dict(
+        num_trees=N_TREES, depth=DEPTH, rowsample=ROWSAMPLE, colsample=COLSAMPLE
+    )
+
+    # ---- binning: serve-time shape + fit-time shape (both report-only)
+    binner = Binner.fit(x)
+    xs = x[:128]  # one query's candidate set, the classify() hot path
+    loop_s, t_bins_loop = _timed_min(5, _binning_loop, binner, xs)
+    vec_s, t_bins_vec = _timed_min(5, binner.transform, xs)
+    assert np.array_equal(loop_s, vec_s)
+    loop_codes, t_bin_loop = _timed_min(3, _binning_loop, binner, x)
+    vec_codes, t_bin_vec = _timed_min(3, binner.transform, x)
+    assert np.array_equal(loop_codes, vec_codes)
+
+    # ---- fit throughput
+    fh, t_host = _timed_min(3, fit_gbdt, x, y, backend="host", **kw)
+    gbdt.TRACES.reset()
+    fd, t_dev_cold = _timed_min(1, fit_gbdt, x, y, backend="device", **kw)
+    compiles = gbdt.TRACES.total()
+    census = len(fit_census(N_ROWS, N_FEATS, DEPTH, ROWSAMPLE, COLSAMPLE))
+    _, t_dev_warm = _timed_min(3, fit_gbdt, x, y, backend="device", **kw)
+
+    # the tentpole contract, asserted where it holds: bitwise on the ref
+    # (segment_sum) lowering; on real TPU the Pallas MXU contraction
+    # reorders the histogram sums, so parity is allclose there
+    from repro.backends import kernels_use_ref
+
+    if kernels_use_ref():
+        assert np.array_equal(fh.feat, fd.feat) and np.array_equal(fh.thr, fd.thr)
+        assert np.array_equal(fh.leaf.view(np.uint32), fd.leaf.view(np.uint32))
+        parity = "bit-identical"
+    else:
+        np.testing.assert_allclose(fh.leaf, fd.leaf, rtol=1e-4, atol=1e-5)
+        parity = "allclose (Pallas lowering)"
+
+    rows_trees = N_ROWS * N_TREES
+    out = {
+        "gbdt": {
+            "rows": N_ROWS,
+            "features": N_FEATS,
+            "trees": N_TREES,
+            "depth": DEPTH,
+            "default_backend": default_backend(),
+            "fit_host_s": t_host,
+            "fit_device_cold_s": t_dev_cold,
+            "fit_device_warm_s": t_dev_warm,
+            "fit_speedup_warm": t_host / max(t_dev_warm, 1e-9),
+            "row_trees_per_sec_host": rows_trees / t_host,
+            "row_trees_per_sec_device_warm": rows_trees / t_dev_warm,
+            "fit_compiles": int(compiles),
+            "fit_census": int(census),
+            "binning_serve_loop_s": t_bins_loop,
+            "binning_serve_vec_s": t_bins_vec,
+            "binning_speedup": t_bins_loop / max(t_bins_vec, 1e-9),
+            "binning_fit_loop_s": t_bin_loop,
+            "binning_fit_vec_s": t_bin_vec,
+        }
+    }
+    g = out["gbdt"]
+    print(
+        f"[bench_train] fit host {t_host:.2f}s / device {t_dev_warm:.2f}s warm "
+        f"({t_dev_cold:.2f}s cold, x{g['fit_speedup_warm']:.2f}, {compiles} "
+        f"compiles vs census {census}); binning serve "
+        f"{t_bins_loop*1e6:.0f}µs→{t_bins_vec*1e6:.0f}µs "
+        f"(x{g['binning_speedup']:.2f}), fit-shape "
+        f"{t_bin_loop*1e3:.1f}ms→{t_bin_vec*1e3:.1f}ms; forests {parity}"
+    )
+    write_result("bench_train", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -142,6 +142,23 @@ def data_read_reduction(budgets, base_curve, ours_curve, target_err) -> float:
     return budget_at(base_curve) / max(budget_at(ours_curve), 1e-9)
 
 
+def timed(fn, *args, **kw):
+    """(result, wall seconds) of one call."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def timed_min(reps, fn, *args, **kw):
+    """Best-of-N wall time — this container's scheduler is noisy."""
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        out, t = timed(fn, *args, **kw)
+        best = min(best, t)
+    return out, best
+
+
 def write_result(name: str, payload: dict):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:

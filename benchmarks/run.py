@@ -19,6 +19,7 @@ MODULES = [
     "table_kernels",
     "bench_serving",
     "bench_offline",
+    "bench_train",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",

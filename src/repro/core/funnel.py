@@ -113,10 +113,15 @@ def train_funnel(
     seed: int = 0,
     rowsample: float = 0.5,
     colsample: float = 0.7,
+    backend: str | None = None,
 ) -> ImportanceFunnel:
+    """k regressors on Algorithm-4 labels; ``backend`` selects the GBDT fit
+    execution backend (host numpy vs kernel layer) — the exported forests
+    are bit-identical either way, so calibration (τ) is backend-free."""
     thresholds = pick_thresholds(contributions, num_models)
     X = np.concatenate(features, axis=0)
     binner = Binner.fit(X)
+    codes = binner.transform(X)  # bin once; all k model fits share it
     forests: list[Forest] = []
     taus = np.zeros(num_models)
     for i, t in enumerate(thresholds):
@@ -136,8 +141,10 @@ def train_funnel(
             seed=seed + i,
             rowsample=rowsample,
             colsample=colsample,
+            backend=backend,
+            codes=codes,
         )
-        pred = forest.predict(X)
+        pred = forest.predict_codes(codes)  # calibrate on the shared codes
         frac = max(P.mean(), 1.0 / max(len(P), 1))
         # calibrate: recover the training positive fraction
         taus[i] = float(np.quantile(pred, 1.0 - frac))

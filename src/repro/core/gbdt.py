@@ -5,16 +5,33 @@ XGBoost is not available in this environment — and more importantly the
 *prediction* path runs inside the query optimizer, which in our framework is
 JAX — so we implement an XGBoost-class histogram GBDT ourselves:
 
-  * **Fit** (offline, host): features are quantile-binned to uint8 codes
+  * **Fit** (offline): features are quantile-binned to uint8 codes
     (256 bins).  Trees are grown level-wise to a fixed depth; split search
-    computes per-(node, feature, bin) gradient histograms with one
-    vectorized `np.add.at` pass per feature and picks the split maximizing
-    the usual second-order gain  GL²/(HL+λ) + GR²/(HR+λ) − G²/(H+λ).
-    Squared-error loss (g = pred − y, h = 1), matching Appendix B.2.
+    computes per-(node, feature, bin) gradient/hessian histograms and picks
+    the split maximizing the second-order gain
+    GL²/(HL+λ) + GR²/(HR+λ) − G²/(H+λ).  Squared-error loss
+    (g = pred − y, h = 1), matching Appendix B.2.  Fit runs on either
+    execution backend (`repro/backends.py`): ``host`` is vectorized numpy;
+    ``device`` scatters the histograms through the `kernels/tree_hist`
+    layer and runs split search + node partition as one traced program per
+    tree (`lax.fori_loop` over levels), shape-bucketed so the jit cache is
+    bounded (`fit_census`).
   * **Predict** (query time, JAX): the forest is exported as dense arrays
     (feature id / bin threshold per internal node, values per leaf) and
     traversed with a `lax.fori_loop` over depth — fully jittable, so the
     whole funnel (Algorithm 2) can execute on an accelerator.
+
+**Backend parity contract.**  Both backends accumulate histograms as f32
+left folds in row-major (row, sampled-column) order — `np.add.at` on the
+host, XLA `segment_sum` on the device (same per-segment application
+order) — run the split search with the identical f32 expression DAG, and
+apply the boosting update as a separately-rounded ``lr·leaf`` host-side
+step (XLA would contract the fused multiply-add into an FMA, which numpy
+cannot express).  The exported forest is therefore *bit-identical* across
+backends on the same binned codes (tested elementwise), so the predict
+path and `core/funnel.py` calibration are backend-independent.  On real
+TPU the Pallas kernel's MXU contraction reorders the sums; there parity is
+allclose, not bitwise (same caveat as every other kernel in the layer).
 
 Fixed-depth complete trees keep both paths branch-free; unused subtrees are
 padded (gain −inf splits are frozen into "always left" with value-copying
@@ -30,7 +47,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.clustering import bucket_size as _bucket
+from repro.kernels.telemetry import TraceRegistry
+
 NUM_BINS = 256  # uint8 codes
+
+TRACES = TraceRegistry("gbdt")
 
 
 # --------------------------------------------------------------------------
@@ -48,11 +70,47 @@ class Binner:
         edges = np.quantile(x, qs, axis=0).T  # (F, B-1)
         return Binner(np.ascontiguousarray(edges))
 
+    def _lut(self):
+        """Padded flat edges for the branchless search (built once, cached)."""
+        lut = getattr(self, "_lut_cache", None)
+        if lut is None:
+            f, m = self.edges.shape
+            width = 1 << m.bit_length()  # power of two > m ⇒ no bounds checks
+            ep = np.full((f, width), np.inf)
+            ep[:, :m] = self.edges
+            lut = (
+                ep.ravel(),
+                (np.arange(f, dtype=np.int64) * width)[:, None],
+                np.ascontiguousarray(ep[:, width // 2 - 1])[:, None],
+                width,
+            )
+            self._lut_cache = lut
+        return lut
+
     def transform(self, x: np.ndarray) -> np.ndarray:
-        out = np.empty(x.shape, np.uint8)
-        for f in range(x.shape[1]):
-            out[:, f] = np.searchsorted(self.edges[f], x[:, f], side="right")
-        return out
+        """Vectorized `searchsorted(edges[f], x[:, f], side="right")`.
+
+        One branchless binary search over every (row, feature) cell at
+        once — ⌈log₂ 256⌉ gather/compare passes on the whole matrix
+        instead of a Python loop over features.  Edges are padded to a
+        power of two with +inf so no probe needs a bounds check, and the
+        first probe is a broadcast compare against the cached midpoint
+        column (no gather).  Invariant: pos = #{i : edges[f, i] <= v} —
+        exactly bisect-right; NaN sorts past every edge, matching
+        `np.searchsorted`.
+        """
+        flat, off, mid, width = self._lut()
+        m = self.edges.shape[1]
+        xt = x.T  # (F, N)
+        pos = np.where(mid <= xt, np.int64(width // 2), np.int64(0))
+        b = width // 4
+        while b:
+            ev = flat[pos + (b - 1) + off]
+            pos += np.where(ev <= xt, b, 0)
+            b >>= 1
+        np.minimum(pos, m, out=pos)
+        pos[np.isnan(xt)] = m
+        return np.ascontiguousarray(pos.astype(np.uint8).T)
 
     def transform_jnp(self, x: jax.Array) -> jax.Array:
         edges = jnp.asarray(self.edges)  # (F, B-1)
@@ -142,82 +200,79 @@ def forest_predict_jnp(
 
 
 # --------------------------------------------------------------------------
-# fitting
+# fitting — shared preamble
 # --------------------------------------------------------------------------
-def fit_gbdt(
-    x: np.ndarray,
-    y: np.ndarray,
-    *,
-    num_trees: int = 60,
-    depth: int = 5,
-    learning_rate: float = 0.3,
-    lam: float = 1.0,
-    min_child_weight: float = 4.0,
-    sample_weight: np.ndarray | None = None,
-    binner: Binner | None = None,
-    seed: int = 0,
-    colsample: float = 1.0,
-    rowsample: float = 1.0,
-) -> Forest:
-    """Squared-error histogram GBDT (level-wise, fixed depth)."""
-    x = np.asarray(x, np.float64)
-    y = np.asarray(y, np.float64)
-    n, n_feat = x.shape
-    w = np.ones(n) if sample_weight is None else np.asarray(sample_weight, np.float64)
-    binner = binner or Binner.fit(x)
-    codes = binner.transform(x).astype(np.int64)  # (n, F)
-    rng = np.random.default_rng(seed)
-
-    base = float(np.average(y, weights=w))
-    pred = np.full(n, base)
-    n_internal = 2**depth - 1
-    feats = np.zeros((num_trees, n_internal), np.int32)
-    thrs = np.full((num_trees, n_internal), NUM_BINS, np.int32)  # always-left default
-    leaves = np.zeros((num_trees, 2**depth), np.float32)
-
-    for t in range(num_trees):
+def _sample_plan(rng, n, n_feat, num_trees, rowsample, colsample):
+    """Per-tree (row, feature) subsets; one rng consumption order for both
+    backends so a host fit and a device fit draw identical subsamples."""
+    plan = []
+    for _ in range(num_trees):
         if rowsample < 1.0:
-            rows = np.sort(
-                rng.choice(n, size=max(32, int(rowsample * n)), replace=False)
-            )
+            size = min(n, max(32, int(rowsample * n)))
+            rows = np.sort(rng.choice(n, size=size, replace=False))
         else:
-            rows = slice(None)
-        codes_t = codes[rows]
+            rows = np.arange(n)
+        if colsample < 1.0:
+            fs = np.sort(rng.choice(n_feat, size=max(1, int(colsample * n_feat)), replace=False))
+        else:
+            fs = np.arange(n_feat)
+        plan.append((rows, fs))
+    return plan
+
+
+def _route_all(codes, feats_t, thrs_t, depth):
+    """Leaf index of every row under one tree (host, level loop)."""
+    n = codes.shape[0]
+    full = np.zeros(n, np.int64)
+    base_id = 0
+    for level in range(depth):
+        ids = base_id + np.arange(2**level)
+        gr = codes[np.arange(n), feats_t[ids][full]] > thrs_t[ids][full]
+        full = 2 * full + gr
+        base_id += 2**level
+    return full
+
+
+# --------------------------------------------------------------------------
+# host backend (canonical f32 numpy)
+# --------------------------------------------------------------------------
+def _fit_host(codes, y, w, pred, plan, feats, thrs, leaves, *, depth, lr, lam, mcw):
+    """Level-wise fit on numpy.  All reductions are f32 left folds in row
+    order (`np.add.at`) and the gain DAG is pure f32 — the bit-parity
+    reference the device backend is tested against."""
+    num_trees = feats.shape[0]
+    n_feat = codes.shape[1]
+    for t in range(num_trees):
+        rows, fs = plan[t]
+        # full-sample trees read the matrix directly (fancy-index copies it)
+        codes_t = codes if len(rows) == codes.shape[0] else codes[rows]
         nt = codes_t.shape[0]
         arangen = np.arange(nt)
-        g = (w * (pred - y))[rows]  # dL/dpred for 0.5*(pred-y)^2, weighted
+        g = (w * (pred - y))[rows]  # f32; dL/dpred for 0.5*(pred-y)^2
         h = w[rows].copy()
         node = np.zeros(nt, np.int64)  # node index within current level
         node_base = 0  # first node id of current level in the tree arrays
-        feat_subset = (
-            np.sort(rng.choice(n_feat, size=max(1, int(colsample * n_feat)), replace=False))
-            if colsample < 1.0
-            else np.arange(n_feat)
-        )
         for level in range(depth):
             n_nodes = 2**level
-            # gradient histograms: (nodes, F, B) — one flattened bincount
-            # per level instead of a per-feature np.add.at loop.
-            fs = feat_subset
+            # gradient histograms: (nodes, F, B) — one f32 scatter pass per
+            # level; features outside `fs` keep zero histograms (dead).
             flat_idx = (
                 (node[:, None] * n_feat + fs[None, :]) * NUM_BINS + codes_t[:, fs]
             ).reshape(-1)
             size = n_nodes * n_feat * NUM_BINS
-            G = np.bincount(
-                flat_idx, weights=np.repeat(g, fs.size), minlength=size
-            ).reshape(n_nodes, n_feat, NUM_BINS)
-            H = np.bincount(
-                flat_idx, weights=np.repeat(h, fs.size), minlength=size
-            ).reshape(n_nodes, n_feat, NUM_BINS)
+            G = np.zeros(size, np.float32)
+            H = np.zeros(size, np.float32)
+            np.add.at(G, flat_idx, np.repeat(g, fs.size))
+            np.add.at(H, flat_idx, np.repeat(h, fs.size))
+            G = G.reshape(n_nodes, n_feat, NUM_BINS)
+            H = H.reshape(n_nodes, n_feat, NUM_BINS)
             GL = G.cumsum(axis=2)
             HL = H.cumsum(axis=2)
             Gt = GL[:, :, -1:]
             Ht = HL[:, :, -1:]
             GR, HR = Gt - GL, Ht - HL
-            gain = (
-                GL**2 / (HL + lam) + GR**2 / (HR + lam) - Gt**2 / (Ht + lam)
-            )
-            ok = (HL >= min_child_weight) & (HR >= min_child_weight)
+            gain = GL * GL / (HL + lam) + GR * GR / (HR + lam) - Gt * Gt / (Ht + lam)
+            ok = (HL >= mcw) & (HR >= mcw)
             gain = np.where(ok, gain, -np.inf)
             # exclude the last bin (right side empty by construction)
             gain[:, :, -1] = -np.inf
@@ -237,24 +292,237 @@ def fit_gbdt(
             node = 2 * node + go_right
             node_base += n_nodes
         # leaf values (from the subsample)
-        Gs = np.zeros(2**depth)
-        Hs = np.zeros(2**depth)
+        Gs = np.zeros(2**depth, np.float32)
+        Hs = np.zeros(2**depth, np.float32)
         np.add.at(Gs, node, g)
         np.add.at(Hs, node, h)
         lv = -Gs / (Hs + lam)
-        leaves[t] = lv.astype(np.float32)
-        # route ALL rows for the prediction update
-        if rowsample < 1.0:
-            full = np.zeros(n, np.int64)
-            base_id = 0
-            for level in range(depth):
-                ids = base_id + np.arange(2**level)
-                gr = codes[np.arange(n), feats[t, ids][full]] > thrs[t, ids][full]
-                full = 2 * full + gr
-                base_id += 2**level
-            pred += learning_rate * lv[full]
+        leaves[t] = lv
+        # route ALL rows for the prediction update; lr·leaf is rounded once
+        # before the add (the FMA-free form the device backend also uses)
+        scaled = np.float32(lr) * lv
+        if len(rows) < codes.shape[0]:
+            pred += scaled[_route_all(codes, feats[t], thrs[t], depth)]
         else:
-            pred += learning_rate * lv[node]
+            pred += scaled[node]
+
+
+# --------------------------------------------------------------------------
+# device backend (kernel histograms + jitted split search)
+# --------------------------------------------------------------------------
+def _cumsum_seq(x: jax.Array) -> jax.Array:
+    """Left-fold cumsum over the last axis (bit-matches `np.cumsum`; XLA's
+    native cumsum lowers to a log-depth scan with a different association)."""
+
+    def body(b, carry):
+        run, out = carry
+        run = run + x[..., b]
+        return run, out.at[..., b].set(run)
+
+    _, out = jax.lax.fori_loop(
+        0, x.shape[-1], body, (jnp.zeros(x.shape[:-1], x.dtype), jnp.zeros_like(x))
+    )
+    return out
+
+
+@partial(jax.jit, static_argnames=("depth", "use_ref"))
+def _fit_tree_device(codes, rows, fs, g, h, lam, mcw, *, depth, use_ref):
+    """One boosting tree as a single traced program.
+
+    codes (Npad, F) int32 resident bin codes; rows (ntp,) int32 sampled row
+    ids (-1 = pad, dropped from every reduction); fs (fc,) int32 sampled
+    feature ids; g/h (ntp,) f32 aligned with `rows`.  Returns the tree's
+    dense arrays plus the leaf index of every (padded) row — the boosting
+    update itself happens on the host so ``pred + lr·leaf`` stays two
+    IEEE roundings on both backends (XLA would fuse it into an FMA).
+    """
+    from repro.kernels import ops
+
+    npad, n_feat = codes.shape
+    ntp = rows.shape[0]
+    fc = fs.shape[0]
+    TRACES.note("fit_tree", npad, n_feat, ntp, fc, depth)
+    nmax = 2 ** (depth - 1)
+    n_int = 2**depth - 1
+    valid = rows >= 0
+    codes_rows = codes[jnp.maximum(rows, 0)]  # (ntp, F)
+    codes_sub = codes_rows[:, fs]  # (ntp, fc)
+
+    def level(lvl, carry):
+        node, feats, thrs = carry
+        node_m = jnp.where(valid, node, -1)
+        GH = ops.tree_hist_op(
+            codes_sub, fs, node_m, g, h, nmax, n_feat, NUM_BINS, use_ref=use_ref
+        )
+        GHL = _cumsum_seq(GH)  # (2, nmax, F, B) left-fold prefix sums
+        GL, HL = GHL[0], GHL[1]
+        Gt = GL[..., -1:]
+        Ht = HL[..., -1:]
+        GR, HR = Gt - GL, Ht - HL
+        gain = GL * GL / (HL + lam) + GR * GR / (HR + lam) - Gt * Gt / (Ht + lam)
+        ok = (HL >= mcw) & (HR >= mcw)
+        gain = jnp.where(ok, gain, -jnp.inf)
+        gain = gain.at[..., -1].set(-jnp.inf)
+        flat = gain.reshape(nmax, -1)
+        best = jnp.argmax(flat, axis=1)
+        best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+        bf = (best // NUM_BINS).astype(jnp.int32)
+        bb = (best % NUM_BINS).astype(jnp.int32)
+        dead = ~jnp.isfinite(best_gain)
+        bf = jnp.where(dead, 0, bf)
+        bbs = jnp.where(dead, NUM_BINS, bb).astype(jnp.int32)
+        # this level occupies tree slots [2^l - 1, 2^{l+1} - 1); histogram
+        # slots past the level's width are all-dead and go to the dump slot
+        n_nodes = 1 << lvl
+        slot = jnp.arange(nmax, dtype=jnp.int32)
+        write_ix = jnp.where(slot < n_nodes, n_nodes - 1 + slot, n_int)
+        feats = feats.at[write_ix].set(bf)
+        thrs = thrs.at[write_ix].set(bbs)
+        code_at = jnp.take_along_axis(codes_rows, bf[node][:, None], axis=1)[:, 0]
+        node = 2 * node + (code_at > bbs[node]).astype(jnp.int32)
+        return node, feats, thrs
+
+    node0 = jnp.zeros(ntp, jnp.int32)
+    feats0 = jnp.zeros(n_int + 1, jnp.int32)  # +1 = dump slot for dead pads
+    thrs0 = jnp.full(n_int + 1, NUM_BINS, jnp.int32)
+    node, feats, thrs = jax.lax.fori_loop(0, depth, level, (node0, feats0, thrs0))
+
+    leaf_seg = jnp.where(valid, node, -1)
+    GHs = jax.ops.segment_sum(jnp.stack([g, h], axis=1), leaf_seg, num_segments=2**depth)
+    lv = -GHs[:, 0] / (GHs[:, 1] + lam)
+
+    def rstep(lvl, full):
+        nb = (1 << lvl) - 1
+        idx = nb + full
+        code_at = jnp.take_along_axis(codes, feats[idx][:, None], axis=1)[:, 0]
+        return 2 * full + (code_at > thrs[idx]).astype(jnp.int32)
+
+    full = jax.lax.fori_loop(0, depth, rstep, jnp.zeros(npad, jnp.int32))
+    return feats[:n_int], thrs[:n_int], lv, full
+
+
+def _fit_device(
+    codes, y, w, pred, plan, feats, thrs, leaves, *, depth, lr, lam, mcw, use_ref
+):
+    n, n_feat = codes.shape
+    npad = _bucket(n)
+    codes_dev = jnp.asarray(
+        np.pad(codes.astype(np.int32), ((0, npad - n), (0, 0)))
+    )
+    lam_d = jnp.float32(lam)
+    mcw_d = jnp.float32(mcw)
+    lr32 = np.float32(lr)
+    for t in range(feats.shape[0]):
+        rows, fs = plan[t]
+        nt = rows.shape[0]
+        ntp = _bucket(nt)
+        rows_p = np.full(ntp, -1, np.int32)
+        rows_p[:nt] = rows
+        gfull = w * (pred - y)  # f32, identical elementwise to the host DAG
+        gp = np.zeros(ntp, np.float32)
+        gp[:nt] = gfull[rows]
+        hp = np.zeros(ntp, np.float32)
+        hp[:nt] = w[rows]
+        feat_t, thr_t, lv, full = _fit_tree_device(
+            codes_dev,
+            jnp.asarray(rows_p),
+            jnp.asarray(fs.astype(np.int32)),
+            jnp.asarray(gp),
+            jnp.asarray(hp),
+            lam_d,
+            mcw_d,
+            depth=depth,
+            use_ref=use_ref,
+        )
+        feats[t] = np.asarray(feat_t)
+        thrs[t] = np.asarray(thr_t)
+        lv = np.asarray(lv)
+        leaves[t] = lv
+        scaled = lr32 * lv
+        pred += scaled[np.asarray(full)[:n]]
+
+
+def fit_census(n: int, n_feat: int, depth: int, rowsample: float, colsample: float) -> set:
+    """Expected `TRACES` keys for one device fit — the compile upper bound.
+
+    One tree program per (row-bucket, feature-count, subsample-bucket,
+    colsample-width, depth); every tree of a fit shares it, so a whole
+    forest compiles exactly once per census entry.
+    """
+    nt = n if rowsample >= 1.0 else min(n, max(32, int(rowsample * n)))
+    fc = n_feat if colsample >= 1.0 else max(1, int(colsample * n_feat))
+    return {("fit_tree", _bucket(n), n_feat, _bucket(nt), fc, depth)}
+
+
+# --------------------------------------------------------------------------
+# public fit entry point
+# --------------------------------------------------------------------------
+def fit_gbdt(
+    x: np.ndarray,
+    y: np.ndarray,
+    *,
+    num_trees: int = 60,
+    depth: int = 5,
+    learning_rate: float = 0.3,
+    lam: float = 1.0,
+    min_child_weight: float = 4.0,
+    sample_weight: np.ndarray | None = None,
+    binner: Binner | None = None,
+    seed: int = 0,
+    colsample: float = 1.0,
+    rowsample: float = 1.0,
+    backend: str | None = None,
+    codes: np.ndarray | None = None,
+) -> Forest:
+    """Squared-error histogram GBDT (level-wise, fixed depth).
+
+    ``backend`` follows `repro.backends` resolution (explicit argument >
+    ``REPRO_EVAL_BACKEND`` > platform default); both backends export
+    bit-identical forests for the same inputs (see module docstring).
+    ``codes`` accepts the precomputed `binner.transform(x)` so callers
+    fitting several forests on one matrix (the funnel's k models) bin it
+    once instead of per fit.
+    """
+    from repro.backends import kernels_use_ref, resolve_backend
+
+    backend = resolve_backend(backend)
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float32)
+    n, n_feat = x.shape
+    w = (
+        np.ones(n, np.float32)
+        if sample_weight is None
+        else np.asarray(sample_weight, np.float32)
+    )
+    if codes is None:
+        binner = binner or Binner.fit(x)
+        codes = binner.transform(x)
+    elif binner is None:
+        raise ValueError("precomputed codes require the binner that made them")
+    codes = np.asarray(codes, np.int64)  # (n, F)
+    rng = np.random.default_rng(seed)
+    plan = _sample_plan(rng, n, n_feat, num_trees, rowsample, colsample)
+
+    base = float(np.average(y.astype(np.float64), weights=w.astype(np.float64)))
+    pred = np.full(n, base, np.float32)
+    n_internal = 2**depth - 1
+    feats = np.zeros((num_trees, n_internal), np.int32)
+    thrs = np.full((num_trees, n_internal), NUM_BINS, np.int32)  # always-left default
+    leaves = np.zeros((num_trees, 2**depth), np.float32)
+
+    kw = dict(
+        depth=depth,
+        lr=learning_rate,
+        lam=np.float32(lam),
+        mcw=np.float32(min_child_weight),
+    )
+    if backend == "device":
+        _fit_device(
+            codes, y, w, pred, plan, feats, thrs, leaves,
+            use_ref=kernels_use_ref(), **kw,
+        )
+    else:
+        _fit_host(codes, y, w, pred, plan, feats, thrs, leaves, **kw)
 
     return Forest(depth, learning_rate, base, feats, thrs, leaves, binner)
 

@@ -263,6 +263,7 @@ def train_picker(
         num_trees=config.num_trees,
         depth=config.tree_depth,
         seed=config.seed,
+        backend=backend,
     )
     if config.feature_selection:
         mask = featsel.select_features(

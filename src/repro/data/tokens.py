@@ -105,14 +105,15 @@ class PS3DataPlane:
     """Weighted shard selection + batch assembly + straggler substitution."""
 
     def __init__(self, store: TokenStore, *, budget_frac: float = 0.25,
-                 num_train_queries: int = 24, seed: int = 0):
+                 num_train_queries: int = 24, seed: int = 0,
+                 backend: str | None = None):
         self.store = store
-        self.fb = FeatureBuilder(store.meta, build_sketches(store.meta))
+        self.fb = FeatureBuilder(store.meta, build_sketches(store.meta, backend=backend))
         wl = WorkloadSpec(store.meta, seed=seed)
         cfg = PickerConfig(num_trees=16, tree_depth=3, feature_selection=False)
         self.art = train_picker(
             store.meta, wl, num_train_queries=num_train_queries, config=cfg,
-            fb=self.fb,
+            fb=self.fb, backend=backend,
         )
         self.picker = self.art.picker
         self.budget = max(1, int(budget_frac * store.n_shards))
@@ -141,12 +142,21 @@ class PS3DataPlane:
         return repl
 
     # ---- batches -------------------------------------------------------
-    def batches(self, batch_size: int, num_batches: int, seed: int = 0):
-        """Yields {tokens, targets, loss_weights} sampling shards ∝ weight."""
-        rng = np.random.default_rng(seed)
+    def batches(self, batch_size: int, num_batches: int, seed: int = 0,
+                start: int = 0):
+        """Yields {tokens, targets, loss_weights} sampling shards ∝ weight.
+
+        Seeding is *per step*: batch i draws from ``rng((seed, start+i))``,
+        so a run resumed at absolute step k (``start=k``) replays exactly
+        the batch stream the uninterrupted run would have seen (crash/
+        resume determinism, not just statistical equivalence), while the
+        seed-sequence pair keeps adjacent seeds' streams independent
+        (``seed+i`` arithmetic would make seed 1 replay seed 0 shifted).
+        """
         p = self.weights / self.weights.sum()
         spp = self.store.tokens.shape[1]
-        for _ in range(num_batches):
+        for i in range(num_batches):
+            rng = np.random.default_rng((seed, start + i))
             sh = rng.choice(len(self.shard_ids), size=batch_size, p=p)
             rows = rng.integers(0, spp, size=batch_size)
             toks = self.store.tokens[self.shard_ids[sh], rows]

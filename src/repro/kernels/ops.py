@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels import groupagg, histogram, moments, pdist, predicate, ref
+from repro.kernels import groupagg, histogram, moments, pdist, predicate, ref, tree_hist
 
 __all__ = [
     "moments_op",
@@ -17,6 +17,7 @@ __all__ = [
     "pdist_sq_op",
     "group_aggregate_op",
     "predicate_eval_op",
+    "tree_hist_op",
 ]
 
 
@@ -48,3 +49,12 @@ def predicate_eval_op(cols, lo, hi, group_map, num_groups: int, use_ref: bool = 
     if use_ref:
         return ref.predicate_eval_ref(cols, lo, hi, group_map)
     return predicate.predicate_eval(cols, lo, hi, group_map, num_groups)
+
+
+def tree_hist_op(
+    codes, feat_ids, node, g, h,
+    num_nodes: int, num_feats: int, num_bins: int = 256, use_ref: bool = False,
+):
+    if use_ref:
+        return ref.tree_hist_ref(codes, feat_ids, node, g, h, num_nodes, num_feats, num_bins)
+    return tree_hist.tree_hist(codes, feat_ids, node, g, h, num_nodes, num_feats, num_bins)

@@ -58,6 +58,35 @@ def group_aggregate_ref(
     return jnp.einsum("pvr,prg->pvg", masked, onehot)
 
 
+def tree_hist_ref(
+    codes: jax.Array,  # (R, C) int32 bin codes of the sampled feature columns
+    feat_ids: jax.Array,  # (C,) int32 global feature ids
+    node: jax.Array,  # (R,) int32 level-node index; -1 drops the row
+    g: jax.Array,
+    h: jax.Array,
+    num_nodes: int,
+    num_feats: int,
+    num_bins: int = 256,
+) -> jax.Array:
+    """→ (2, num_nodes, num_feats, num_bins) G/H histograms.
+
+    XLA `segment_sum` lowering: updates apply in row-major (row, column)
+    order — the same left-fold per segment as the host fit's `np.add.at`
+    pass, so on CPU this lowering is *bit-identical* to the host
+    histograms (the device-fit parity contract; see `core/gbdt.py`).
+    G and H ride one two-column scatter (per-lane adds keep their order),
+    halving the scatter passes — the dominant cost of a CPU device fit.
+    """
+    r, c = codes.shape
+    seg = (node[:, None] * num_feats + feat_ids[None, :]) * num_bins + codes
+    seg = jnp.where(node[:, None] >= 0, seg, -1).reshape(-1)
+    size = num_nodes * num_feats * num_bins
+    gg = jnp.broadcast_to(g.astype(jnp.float32)[:, None], (r, c)).reshape(-1)
+    hh = jnp.broadcast_to(h.astype(jnp.float32)[:, None], (r, c)).reshape(-1)
+    GH = jax.ops.segment_sum(jnp.stack([gg, hh], axis=1), seg, num_segments=size)
+    return GH.T.reshape(2, num_nodes, num_feats, num_bins)
+
+
 def predicate_eval_ref(
     cols: jax.Array, lo: jax.Array, hi: jax.Array, group_map: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

@@ -53,13 +53,16 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-backend", default=None, choices=("host", "device"),
+                    help="offline-plane backend for picker training "
+                    "(sketches, labels, GBDT fit); default = platform policy")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")
 
     store = make_token_store(seq_len=129, vocab=cfg.vocab, seed=args.seed)
-    plane = PS3DataPlane(store, seed=args.seed)
+    plane = PS3DataPlane(store, seed=args.seed, backend=args.eval_backend)
     est, truth = plane.mixture_estimate()
     print(f"data plane: {len(plane.shard_ids)}/{store.n_shards} shards selected; "
           f"mixture groups covered: {np.isfinite(est[:, 0]).mean():.0%}")
@@ -80,7 +83,7 @@ def main(argv=None):
 
     watchdog = StepWatchdog()
     losses = []
-    gen = plane.batches(args.batch, args.steps - start, seed=args.seed + start)
+    gen = plane.batches(args.batch, args.steps - start, seed=args.seed, start=start)
     for step, batch in enumerate(gen, start=start + 1):
         t0 = time.perf_counter()
         batch = {k: jnp.asarray(v) for k, v in batch.items()}

@@ -219,7 +219,13 @@ def _device_inputs(stack, col_idx, coefs, mults):
     ncols1, p, r = stack.shape
     qb, cb = col_idx.shape
     vb = coefs.shape[1]
+    # the einsums contract zero coefficients against EVERY column, and
+    # 0·inf = NaN — sanitize the contraction image (queries whose own
+    # aggregates touch a non-finite column fall back to the host path, so
+    # zeroing here only silences unreferenced columns); clause gathers
+    # below read the raw stack, where non-finite rows compare exactly
     flat = stack.reshape(ncols1, p * r)
+    flat = jnp.where(jnp.isfinite(flat), flat, jnp.float32(0))
     # aggregate components: linear projections = coefficient matmul (MXU)
     values = jnp.einsum("qvc,cs->qvs", coefs, flat).reshape(qb, vb, p, r)
     values = values.transpose(0, 2, 1, 3).reshape(qb * p, vb, r)
@@ -358,7 +364,9 @@ def _plan_workload(table: Table, queries: list[Query], cache: engine.EvalCache):
     fallback: list[tuple[int, Query]] = []
     for i, q in enumerate(queries):
         canon = canonicalize_predicate(table, q.predicate, cache)
-        if canon is None:
+        if canon is None or any(
+            cache.has_nonfinite(col) for agg in q.aggregates for _, col in agg.terms
+        ):
             fallback.append((i, q))
             continue
         radix = engine.group_radix_checked(table, q.groupby)

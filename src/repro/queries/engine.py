@@ -220,6 +220,7 @@ class EvalCache:
         self._f32: dict[str, np.ndarray] = {}
         self._proj: dict[tuple, np.ndarray] = {}
         self._posinf: dict[str, bool] = {}
+        self._nonfinite: dict[str, bool] = {}
         self._stack = None  # device-resident (n_cols+1, P, R) column stack
         self.col_index = {s.name: i for i, s in enumerate(table.schema)}
         self.ones_index = len(table.schema)
@@ -246,6 +247,18 @@ class EvalCache:
         hit = self._posinf.get(col)
         if hit is None:
             hit = self._posinf[col] = bool(np.isposinf(self.table.columns[col]).any())
+        return hit
+
+    def has_nonfinite(self, col: str) -> bool:
+        """inf/NaN rows defeat the device driver's projection einsums (they
+        contract zero coefficients against every column, and 0·inf = NaN),
+        so aggregates over such columns take the host path and the stack is
+        sanitized for the contraction inputs (`queries.device`)."""
+        hit = self._nonfinite.get(col)
+        if hit is None:
+            hit = self._nonfinite[col] = not bool(
+                np.isfinite(self.table.columns[col]).all()
+            )
         return hit
 
     def f32(self, col: str) -> np.ndarray:
@@ -332,9 +345,19 @@ class AnswerStore:
     def get_batch(self, queries: list[Query]) -> list[PartitionAnswers]:
         """Answers for a batch; all misses evaluated in one stacked pass."""
         keys = [query_key(q) for q in queries]
+        # snapshot every pre-cached answer up front (non-destructively, so
+        # an exception in the miss pass leaves the cache intact): the
+        # re-insertions below may evict an entry before its position in the
+        # batch is reached, and it was skipped by the miss pass
+        held: dict[str, PartitionAnswers] = {}
         missing: dict[str, Query] = {}
         for q, key in zip(queries, keys):
-            if key not in self._cache and key not in missing:
+            if key in held or key in missing:
+                continue
+            hit = self._cache.get(key)
+            if hit is not None:
+                held[key] = hit
+            else:
                 missing[key] = q
         fresh: dict[str, PartitionAnswers] = {}
         if missing:
@@ -348,6 +371,8 @@ class AnswerStore:
         out: list[PartitionAnswers] = []
         for key in keys:
             hit = self._cache.pop(key, None)
+            if hit is None and key in held:
+                hit = held[key]
             if hit is not None:
                 self.hits += 1
             else:

@@ -1,0 +1,203 @@
+"""Device-backend GBDT fit: bit-parity vs the host fit + compile census.
+
+The contract under test (core/gbdt.py module docstring): on the same
+binned codes, ``fit_gbdt(backend="device")`` exports a forest whose
+feat/thr/leaf arrays are *bit-identical* to ``backend="host"`` — the
+histograms are f32 left folds in the same per-segment order on both
+backends, the gain DAG is the same f32 expression, and the boosting
+update is FMA-free.  Off-TPU the device fit lowers through the XLA
+`segment_sum` reference (`kernels/ref.tree_hist_ref`); the Pallas kernel
+itself is allclose-tested in interpret mode (MXU accumulation order
+differs, so bitwise only holds for the ref lowering).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gbdt
+from repro.core.funnel import train_funnel
+from repro.core.gbdt import Binner, fit_census, fit_gbdt
+from repro.kernels import ops, ref
+
+
+def _assert_forests_identical(fh, fd):
+    np.testing.assert_array_equal(fh.feat, fd.feat)
+    np.testing.assert_array_equal(fh.thr, fd.thr)
+    # bitwise, not allclose: -0.0 vs +0.0 or 1-ulp drift must fail
+    np.testing.assert_array_equal(
+        fh.leaf.view(np.uint32), fd.leaf.view(np.uint32)
+    )
+    assert fh.base == fd.base
+
+
+def _data(n=777, f=9, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f))
+    y = x @ rng.normal(size=f) + np.sin(x[:, 0] * 3)
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# fit parity
+# --------------------------------------------------------------------------
+def test_device_fit_bit_identical():
+    x, y = _data()
+    fh = fit_gbdt(x, y, num_trees=8, depth=5, backend="host")
+    fd = fit_gbdt(x, y, num_trees=8, depth=5, backend="device")
+    _assert_forests_identical(fh, fd)
+    # and the exported forest actually predicts identically
+    np.testing.assert_array_equal(fh.predict(x), fd.predict(x))
+
+
+def test_device_fit_bit_identical_subsampled():
+    """rowsample/colsample (the funnel's training config) share one rng plan."""
+    x, y = _data()
+    kw = dict(num_trees=8, depth=4, rowsample=0.5, colsample=0.6, seed=3)
+    _assert_forests_identical(
+        fit_gbdt(x, y, backend="host", **kw), fit_gbdt(x, y, backend="device", **kw)
+    )
+
+
+def test_device_fit_weighted_parity():
+    x, y = _data()
+    w = np.abs(np.random.default_rng(4).normal(size=x.shape[0])) + 0.1
+    kw = dict(num_trees=6, depth=4, sample_weight=w)
+    _assert_forests_identical(
+        fit_gbdt(x, y, backend="host", **kw), fit_gbdt(x, y, backend="device", **kw)
+    )
+
+
+@pytest.mark.parametrize(
+    "case",
+    [
+        "constant_feature",  # zero-width histograms on one column
+        "tiny_n",  # n_rows < NUM_BINS
+        "odd_n",  # rows % bucket != 0 → masked pad rows
+        "identical_labels",  # g == 0 everywhere → zero-gain splits, -0.0 leaves
+        "deep",  # depth padding: dead subtrees frozen always-left
+    ],
+)
+def test_device_fit_edge_cases(case):
+    x, y = _data(n=500, f=6, seed=7)
+    kw = dict(num_trees=5, depth=4)
+    if case == "constant_feature":
+        x[:, 2] = 1.25
+    elif case == "tiny_n":
+        x, y = x[:100], y[:100]
+    elif case == "odd_n":
+        x, y = x[:333], y[:333]
+    elif case == "identical_labels":
+        y = np.full(x.shape[0], 2.5)
+    elif case == "deep":
+        x, y = x[:80], y[:80]
+        kw = dict(num_trees=3, depth=6)  # 63 internal nodes, 80 rows
+    fh = fit_gbdt(x, y, backend="host", **kw)
+    fd = fit_gbdt(x, y, backend="device", **kw)
+    _assert_forests_identical(fh, fd)
+    if case == "identical_labels":
+        # base absorbs everything: every leaf is exactly ±0.0 (and the -0.0
+        # sign itself must agree bitwise, which _assert_forests_identical
+        # already checked)
+        np.testing.assert_array_equal(np.abs(fh.leaf), 0.0)
+
+
+def test_train_funnel_backend_parity():
+    """The picker-facing surface: identical forests ⇒ identical taus."""
+    rng = np.random.default_rng(5)
+    feats = [rng.normal(size=(64, 7)) for _ in range(6)]
+    contribs = [np.abs(rng.normal(size=64)) * (rng.random(64) < 0.4) for _ in range(6)]
+    kw = dict(num_models=2, num_trees=6, depth=3)
+    fh = train_funnel(feats, contribs, backend="host", **kw)
+    fd = train_funnel(feats, contribs, backend="device", **kw)
+    for a, b in zip(fh.forests, fd.forests):
+        _assert_forests_identical(a, b)
+    np.testing.assert_array_equal(fh.taus, fd.taus)
+
+
+# --------------------------------------------------------------------------
+# compile census (fails fast on jit-cache growth)
+# --------------------------------------------------------------------------
+def test_fit_compile_count_bounded_by_census():
+    x, y = _data(n=300, f=5)
+    gbdt.TRACES.reset()
+    fit_gbdt(x, y, num_trees=6, depth=3, backend="device")
+    census = fit_census(300, 5, 3, 1.0, 1.0)
+    assert set(gbdt.TRACES.counts()) <= census
+    assert gbdt.TRACES.total() <= len(census) == 1  # one program for 6 trees
+    # same row bucket → no new trace; new depth → exactly one more
+    fit_gbdt(x[:280], y[:280], num_trees=4, depth=3, backend="device")
+    assert gbdt.TRACES.total() == 1
+    fit_gbdt(x, y, num_trees=2, depth=4, backend="device")
+    assert gbdt.TRACES.total() == 2
+    assert set(gbdt.TRACES.counts()) <= census | fit_census(300, 5, 4, 1.0, 1.0)
+
+
+# --------------------------------------------------------------------------
+# tree_hist kernel (interpret mode) vs oracles
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("r,c,nn,f", [(300, 4, 8, 9), (1024, 3, 16, 5), (513, 1, 1, 2)])
+def test_tree_hist_kernel_matches_ref(r, c, nn, f):
+    rng = np.random.default_rng(r)
+    codes = jnp.asarray(rng.integers(0, 256, size=(r, c)), jnp.int32)
+    fids = jnp.asarray(np.sort(rng.choice(f, size=c, replace=False)), jnp.int32)
+    node = jnp.asarray(rng.integers(-1, nn, size=r), jnp.int32)  # -1 = dropped
+    g = jnp.asarray(rng.normal(size=r), jnp.float32)
+    h = jnp.asarray(np.abs(rng.normal(size=r)), jnp.float32)
+    got = ops.tree_hist_op(codes, fids, node, g, h, nn, f)
+    want = ref.tree_hist_ref(codes, fids, node, g, h, nn, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+    # unsampled features stay exactly zero (the dead-feature convention)
+    mask = np.ones(f, bool)
+    mask[np.asarray(fids)] = False
+    np.testing.assert_array_equal(np.asarray(got)[:, :, mask], 0.0)
+
+
+def test_tree_hist_ref_matches_host_scatter_bitwise():
+    """The CPU-lowering parity axiom: segment_sum ≡ np.add.at left folds."""
+    rng = np.random.default_rng(11)
+    r, c, nn, f = 700, 3, 4, 6
+    codes = rng.integers(0, 256, size=(r, c)).astype(np.int32)
+    fids = np.array([0, 2, 5], np.int32)
+    node = rng.integers(-1, nn, size=r).astype(np.int32)
+    g = (rng.normal(size=r) * 10.0 ** rng.integers(-4, 5, size=r).astype(float)).astype(
+        np.float32
+    )
+    h = np.abs(g) + 1.0
+    want = np.zeros((2, nn * f * 256), np.float32)
+    flat = ((node[:, None] * f + fids[None, :]) * 256 + codes).reshape(-1)
+    keep = np.repeat(node >= 0, c)
+    np.add.at(want[0], flat[keep], np.repeat(g, c)[keep])
+    np.add.at(want[1], flat[keep], np.repeat(h, c)[keep])
+    got = np.asarray(
+        ref.tree_hist_ref(*map(jnp.asarray, (codes, fids, node, g, h)), nn, f)
+    ).reshape(2, -1)
+    np.testing.assert_array_equal(got.view(np.uint32), want.view(np.uint32))
+
+
+# --------------------------------------------------------------------------
+# vectorized binning
+# --------------------------------------------------------------------------
+def test_binner_transform_matches_searchsorted():
+    rng = np.random.default_rng(13)
+    x = rng.normal(size=(500, 7))
+    x[:, 4] = 0.75  # constant feature → fully duplicated edges
+    b = Binner.fit(x)
+    probe = rng.normal(size=(200, 7))
+    probe[0, 0] = np.nan
+    probe[1, 1] = np.inf
+    probe[2, 2] = -np.inf
+    probe[3, 3] = b.edges[3, 17]  # exactly on an edge: side="right" semantics
+    probe[4, 4] = 0.75
+    want = np.empty(probe.shape, np.uint8)
+    for fcol in range(probe.shape[1]):
+        want[:, fcol] = np.searchsorted(b.edges[fcol], probe[:, fcol], side="right")
+    np.testing.assert_array_equal(b.transform(probe), want)
+
+
+def test_binner_transform_jnp_consistent():
+    rng = np.random.default_rng(14)
+    x = rng.normal(size=(300, 5))
+    b = Binner.fit(x)
+    np.testing.assert_array_equal(
+        b.transform(x), np.asarray(b.transform_jnp(jnp.asarray(x))).astype(np.uint8)
+    )

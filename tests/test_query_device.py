@@ -151,6 +151,38 @@ def test_posinf_column_falls_back_to_host():
     assert device.canonicalize_predicate(table, clean, cache) is not None
 
 
+def test_nonfinite_column_does_not_poison_unrelated_queries():
+    """inf/NaN anywhere in the table must not corrupt device answers for
+    queries that never reference that column: the projection einsums
+    contract zero coefficients against every column (0·inf = NaN), so the
+    contraction image is sanitized — and queries whose own aggregates
+    touch the dirty column fall back to the host path."""
+    table = edge_table(seed=9)
+    table.columns["x"][0, :5] = np.inf
+    table.columns["x"][1, 3] = np.nan
+    table.columns["pos"][0, :5] = 5.0  # the poisoned rows pass the predicate
+    table.columns["pos"][1, 3] = 5.0
+    cache = EvalCache(table)
+    clean = Query(
+        (Aggregate("count"), Aggregate("sum", ((1.0, "pos"),))),
+        Predicate.conjunction([Clause("pos", ">", 1.0)]),
+        ("g",),
+    )
+    dirty = Query(
+        (Aggregate("sum", ((1.0, "x"),)),),
+        Predicate.conjunction([Clause("pos", ">", 1.0)]),
+        ("g",),
+    )
+    host = per_partition_answers_batch(table, [clean, dirty], backend="host", cache=cache)
+    dev = device.eval_workload(table, [clean, dirty], cache=cache, use_ref=True)
+    assert_answers_match(host[0], dev[0])
+    assert_answers_match(host[1], dev[1], exact=True)  # host fallback: inf/NaN kept
+    assert not np.isfinite(host[1].raw[:2, :, 1]).all()  # the poison is real
+    # and the census/planner agree the dirty-aggregate query left the stack
+    grouped, fb = device._plan_workload(table, [clean, dirty], cache)
+    assert len(fb) == 1 and fb[0][0] == 1
+
+
 @pytest.mark.slow
 def test_workload_parity_randomized():
     """Generator workload (mixed canonical + fallback) — batch device path

@@ -170,6 +170,19 @@ def test_answer_store_get_batch_matches_get(served):
         np.testing.assert_allclose(g.raw, r.raw)
 
 
+def test_answer_store_get_batch_survives_mid_batch_eviction(served):
+    """A pre-cached entry evicted by the batch's own inserts must still be
+    served (it was skipped by the miss pass, so only the up-front snapshot
+    holds it)."""
+    table, _ = served
+    queries = WorkloadSpec(table, seed=31).sample_workload(6)
+    store = AnswerStore(table, capacity=4)
+    want = store.get(queries[5])  # pre-cache, then bury it behind 5 misses
+    got = store.get_batch(queries)
+    np.testing.assert_allclose(got[5].raw, want.raw)
+    assert store.hits == 1 and store.misses == 6
+
+
 def test_pick_stream_chunks(served):
     table, art = served
     queries = WorkloadSpec(table, seed=19).sample_workload(7)
