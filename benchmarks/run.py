@@ -20,6 +20,7 @@ MODULES = [
     "bench_serving",
     "bench_offline",
     "bench_train",
+    "bench_distributed",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",

@@ -12,6 +12,13 @@ Two backends with identical semantics:
 
 Resolution order: explicit argument > ``REPRO_EVAL_BACKEND`` env var >
 platform default ("device" on TPU, "host" elsewhere).
+
+The device backend additionally takes a partition-axis device mesh
+(``REPRO_MESH`` env var / ``--mesh`` launch switch, resolved by
+`repro.distributed.dataplane`): sketch construction and query evaluation
+shard the partition axis over the mesh with `shard_map`, one ingest/eval
+pass per device over its local partitions.  Unset (or ``0``/``off``) means
+the single-device path; a degenerate 1-device mesh is bit-identical to it.
 """
 from __future__ import annotations
 
@@ -36,6 +43,25 @@ def resolve_backend(backend: str | None) -> str:
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     return backend
+
+
+def default_mesh_devices() -> int:
+    """Partition-axis device count from ``REPRO_MESH``.
+
+    ``""``/``"0"``/``"off"`` → 0 (no mesh: the single-device data plane);
+    ``"auto"``/``"all"`` → every local device; an integer → that many.
+    """
+    env = os.environ.get("REPRO_MESH", "").strip().lower()
+    if env in ("", "0", "off", "none"):
+        return 0
+    if env in ("auto", "all"):
+        return len(jax.devices())
+    n = int(env)
+    if n < 1 or n > len(jax.devices()):
+        raise ValueError(
+            f"REPRO_MESH={n} but {len(jax.devices())} device(s) are available"
+        )
+    return n
 
 
 def kernels_use_ref(use_ref: bool | None = None) -> bool:

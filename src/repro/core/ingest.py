@@ -5,10 +5,15 @@
 heavy-hitter counts) with the Pallas kernel layer in a single pass per
 column; it is the engine behind `core.sketches.build_sketches(table,
 backend="device")` and is tested for parity against the host tensors.
-Per-partition sketch
-construction is embarrassingly parallel, so under a device mesh the
-partition axis is simply sharded (shard_map in the data plane launcher);
-each device streams its local partitions HBM→VMEM once.
+
+Per-partition sketch construction is embarrassingly parallel, so under a
+partition mesh (`distributed/dataplane.py`, ``REPRO_MESH``) the column is
+zero-padded along P to a mesh multiple and sharded; each device runs the
+*same* jitted core over its local partitions (one HBM→VMEM stream per
+device) and only the small (P, k) result tensors are gathered.  The cores
+are mesh-oblivious — they see local-shard shapes — so sharded tensors are
+bit-identical to the single-device ones and the `TRACES` census does not
+grow with mesh size.
 
 The AKMV hash path is vector-friendly and runs as plain XLA (hash +
 top_k); equi-depth edge *placement* requires a global sort which XLA
@@ -17,11 +22,65 @@ already lowers optimally, so only the counting passes use custom kernels
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 
 from repro.data.table import NUMERIC, Table
+from repro.distributed import dataplane
 from repro.kernels import ops
+from repro.kernels.telemetry import TraceRegistry
+
+TRACES = TraceRegistry("ingest")
+
+_ROW_SPEC = dataplane.partition_spec(2, 0)  # (P, k) tensors: shard axis 0
+
+
+def _moments_core(x, *, use_ref):
+    """(P, R) → (P, 8) kernel moments; P is whatever shard this sees."""
+    TRACES.note("moments", *x.shape)
+    return ops.moments_op(x, use_ref=use_ref)
+
+
+def _hist_core(x, edges, *, use_ref):
+    TRACES.note("hist", *x.shape, edges.shape[1])
+    return ops.histogram_range_op(x, edges, use_ref=use_ref)
+
+
+def _bincount_core(codes, *, card, use_ref):
+    TRACES.note("bincount", *codes.shape, card)
+    return ops.bincount_op(codes, card, use_ref=use_ref)
+
+
+_moments_jit = jax.jit(_moments_core, static_argnames=("use_ref",))
+_hist_jit = jax.jit(_hist_core, static_argnames=("use_ref",))
+_bincount_jit = jax.jit(_bincount_core, static_argnames=("card", "use_ref"))
+_JIT_OF = {_moments_core: _moments_jit, _hist_core: _hist_jit,
+           _bincount_core: _bincount_jit}
+
+
+def _partition_resident(plane, arr) -> jax.Array:
+    """One host→device transfer per column: whole on the single device,
+    zero-padded + sharded along P under a mesh.  Device arrays pass
+    through, so a column feeding several cores (moments + histogram)
+    ships exactly once."""
+    if isinstance(arr, jax.Array):
+        return arr
+    return jnp.asarray(arr) if plane is None else plane.shard_partitions(arr)
+
+
+def _per_partition(plane, core, arrays, num_partitions, **static) -> np.ndarray:
+    """Run one counting core over every partition: directly on the single
+    device, or sharded along P with the pad partitions sliced off."""
+    arrays = [_partition_resident(plane, a) for a in arrays]
+    if plane is None:
+        return np.asarray(_JIT_OF[core](*arrays, **static))
+    f = dataplane.sharded_call(
+        plane, core,
+        in_specs=(_ROW_SPEC,) * len(arrays), out_specs=_ROW_SPEC,
+        static=tuple(static.items()),
+    )
+    return plane.gather(f(*arrays), num_partitions)
 
 
 def measures_from_moments(raw: np.ndarray, rows: int, positive: bool) -> np.ndarray:
@@ -58,7 +117,10 @@ def discrete_span(data: np.ndarray, max_width: int = 4096) -> tuple[int, int] | 
 
 
 def build_statistics(
-    table: Table, use_ref: bool = False, discrete_counts: bool = False
+    table: Table,
+    use_ref: bool = False,
+    discrete_counts: bool = False,
+    plane="auto",
 ) -> dict[str, dict]:
     """Kernel-computed per-column statistics tensors.
 
@@ -68,19 +130,26 @@ def build_statistics(
     small range additionally carry exact per-partition frequencies
     ("discrete_counts", "discrete_lo") — the heavy-hitter input that
     `build_sketches(backend="device")` consumes.
+
+    ``plane`` selects the partition mesh ("auto" = the ``REPRO_MESH``
+    policy): each counting pass then runs one launch per device over its
+    local partitions, bit-identical to the single-device tensors.
     """
+    plane = dataplane.resolve_plane(plane)
     out: dict[str, dict] = {}
+    p = table.num_partitions
     rows = table.rows_per_partition
     for spec in table.schema:
         data = table.columns[spec.name]
         if spec.kind == NUMERIC:
-            x = jnp.asarray(data)
-            mom = np.asarray(ops.moments_op(x, use_ref=use_ref))
+            x = _partition_resident(plane, data)  # ships once, feeds both cores
+            mom = _per_partition(plane, _moments_core, (x,), p, use_ref=use_ref)
             edges = np.quantile(
                 data.astype(np.float64), np.linspace(0, 1, 11), axis=1
             ).T
-            hist = np.asarray(
-                ops.histogram_range_op(x, jnp.asarray(edges, jnp.float32), use_ref=use_ref)
+            hist = _per_partition(
+                plane, _hist_core, (x, edges.astype(np.float32)), p,
+                use_ref=use_ref,
             )
             out[spec.name] = {
                 "measures": measures_from_moments(mom, rows, spec.positive),
@@ -91,14 +160,17 @@ def build_statistics(
                 span = discrete_span(data)
                 if span is not None:
                     lo, width = span
-                    codes = jnp.asarray(data.astype(np.int64) - lo, jnp.int32)
-                    counts = np.asarray(ops.bincount_op(codes, width, use_ref=use_ref))
+                    codes = (data.astype(np.int64) - lo).astype(np.int32)
+                    counts = _per_partition(
+                        plane, _bincount_core, (codes,), p,
+                        card=width, use_ref=use_ref,
+                    )
                     out[spec.name]["discrete_counts"] = counts.astype(np.float64)
                     out[spec.name]["discrete_lo"] = lo
         else:
-            codes = jnp.asarray(data)
-            counts = np.asarray(
-                ops.bincount_op(codes, spec.cardinality, use_ref=use_ref)
+            counts = _per_partition(
+                plane, _bincount_core, (data,), p,
+                card=spec.cardinality, use_ref=use_ref,
             )
             out[spec.name] = {"counts": counts.astype(np.float64)}
     return out

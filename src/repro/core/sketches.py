@@ -229,7 +229,10 @@ def _heavy_hitters_exact(counts: np.ndarray, support: float = HH_SUPPORT):
 
 
 def build_sketches(
-    table: Table, backend: str | None = None, use_ref: bool | None = None
+    table: Table,
+    backend: str | None = None,
+    use_ref: bool | None = None,
+    plane="auto",
 ) -> TableSketches:
     """All per-partition sketches for a table (paper §3.1, Table 1).
 
@@ -241,6 +244,10 @@ def build_sketches(
     accumulation of integer counts is exact), measures agree to float32
     rounding.  AKMV and equi-depth edge *placement* stay on the host in
     both modes (53-bit hashes and a global sort; see `_akmv`).
+
+    ``plane`` (device backend only) selects the partition mesh for the
+    ingest kernels ("auto" = the ``REPRO_MESH`` policy); sharded sketches
+    are bit-identical to single-device ones (`distributed/dataplane.py`).
     """
     from repro.backends import resolve_backend
 
@@ -251,7 +258,8 @@ def build_sketches(
         from repro.core.ingest import build_statistics
 
         stats = build_statistics(
-            table, use_ref=kernels_use_ref(use_ref), discrete_counts=True
+            table, use_ref=kernels_use_ref(use_ref), discrete_counts=True,
+            plane=plane,
         )
 
     cols: dict[str, ColumnSketch] = {}

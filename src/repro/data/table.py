@@ -44,6 +44,10 @@ class Table:
     schema: tuple[ColumnSpec, ...]
     columns: dict[str, np.ndarray]
     name: str = "table"
+    # data version: bumped by in-place bulk appends (`concat_tables(into=)`)
+    # so caches keyed to this object (EvalCache device stacks, AnswerStore
+    # answers) can detect that their snapshots went stale
+    version: int = 0
 
     def __post_init__(self):
         shapes = {c.shape for c in self.columns.values()}
@@ -124,11 +128,25 @@ def from_flat(schema, columns: Mapping[str, np.ndarray], name: str) -> Table:
     return Table(tuple(schema), {k: np.asarray(v).reshape(1, -1) for k, v in columns.items()}, name=name)
 
 
-def concat_tables(tables: Sequence[Table]) -> Table:
-    """Bulk-append (the paper's ingest model): partitions are appended."""
-    base = tables[0]
+def concat_tables(tables: Sequence[Table], into: Table | None = None) -> Table:
+    """Bulk-append (the paper's ingest model): partitions are appended.
+
+    With ``into=`` the append happens in place: the target table's columns
+    grow and its ``version`` bumps, which invalidates everything cached
+    against the old contents — `EvalCache` drops its device column stack
+    and derived casts, `AnswerStore` drops its held answers — instead of
+    serving stale results for the smaller table.  The caches rebuild from
+    scratch on next use; *incremental* sketch/stack updates (streaming
+    ingest) stay a ROADMAP item.
+    """
+    base = tables[0] if into is None else into
+    parts = list(tables) if into is None else [into, *tables]
     cols = {
-        k: np.concatenate([t.columns[k] for t in tables], axis=0)
+        k: np.concatenate([t.columns[k] for t in parts], axis=0)
         for k in base.columns
     }
-    return Table(base.schema, cols, name=base.name)
+    if into is None:
+        return Table(base.schema, cols, name=base.name)
+    into.columns = cols
+    into.version += 1
+    return into

@@ -15,6 +15,12 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+# The offline data plane's partition axis (distributed/dataplane.py).  It
+# lives here, next to the model axes, so every mesh builder shares one
+# axis vocabulary: launch/mesh.py grows a ("part",) mesh for ingest/query
+# eval the same way it builds ("data", "model") for training.
+PARTITION_AXIS = "part"
+
 _ACTIVE: tuple[str, ...] = ()
 
 
@@ -33,6 +39,8 @@ def _resolve(tag):
     if tag == "batch":
         dp = tuple(a for a in ("pod", "data") if a in _ACTIVE)
         return dp if len(dp) > 1 else (dp[0] if dp else None)
+    if tag == "partition":
+        return PARTITION_AXIS if PARTITION_AXIS in _ACTIVE else None
     if tag == "seq":
         # sequence parallelism: activations S-sharded on the tensor axis in
         # the scan-carry/norm/residual regions (Megatron SP); GSPMD inserts

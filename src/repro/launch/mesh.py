@@ -7,6 +7,9 @@ device meshes.  Tests build small meshes through the same function.
 """
 from __future__ import annotations
 
+import jax
+
+from repro.distributed.axes import PARTITION_AXIS
 from repro.distributed.compat import make_mesh
 
 
@@ -14,6 +17,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
+
+
+def make_data_plane_mesh(num_devices: int | None = None):
+    """1-D partition-axis mesh for the offline data plane (ingest + query
+    eval).  The partition axis shares the axis vocabulary in
+    `distributed/axes.py` with the model axes, but the data plane never
+    shards model state — sketch construction and per-partition query
+    answers are embarrassingly parallel along P, so a flat ("part",) mesh
+    is the whole story (`distributed/dataplane.py`)."""
+    n = int(num_devices) if num_devices else len(jax.devices())
+    return make_mesh((n,), (PARTITION_AXIS,))
 
 
 # TPU v5e hardware constants (assignment §Roofline)

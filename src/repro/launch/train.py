@@ -11,6 +11,7 @@ exercised here: PS³ shard selection + weighted loss, checkpoint/resume
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -56,7 +57,15 @@ def main(argv=None):
     ap.add_argument("--eval-backend", default=None, choices=("host", "device"),
                     help="offline-plane backend for picker training "
                     "(sketches, labels, GBDT fit); default = platform policy")
+    ap.add_argument("--mesh", default=None,
+                    help="partition-axis device count for the offline data "
+                    "plane ('auto' = all local devices, 0 = single-device; "
+                    "default: REPRO_MESH env)")
     args = ap.parse_args(argv)
+    if args.mesh is not None:
+        # env, not plumbing: every EvalCache / build_statistics below this
+        # point resolves its partition mesh through the REPRO_MESH policy
+        os.environ["REPRO_MESH"] = str(args.mesh)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")

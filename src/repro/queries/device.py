@@ -27,13 +27,22 @@ real OR-group, padded OR-groups get one always-true clause, padded group
 buckets receive no codes, padded value rows are zero, and padded queries
 are sliced off before unpacking.
 
+**Mesh-oblivious drivers.**  The jitted cores (`_eval_core`,
+`_eval_nopred_core`) take whatever (n_cols+1, P, R) stack they are handed
+— the full table on the single-device path, one device's local shard
+under a partition mesh (`distributed/dataplane.py`), where
+`EvalCache.device_stack` is sharded along P and the same cores run inside
+`shard_map` with the per-query descriptors replicated.  Per-partition
+math is unchanged either way, so sharded answers are bit-identical to
+single-device answers, and the census keys (local-shard shapes) keep one
+executable per shape-bucket signature regardless of mesh size.
+
 Trace-count telemetry (`TRACES`) mirrors `core/clustering.py`: the
 compile-bound test asserts the census, `bench_offline` reports it.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +50,7 @@ import numpy as np
 
 from repro.core.clustering import bucket_size
 from repro.data.table import CATEGORICAL, Table
+from repro.distributed import dataplane
 from repro.kernels import ops
 from repro.kernels.telemetry import TraceRegistry
 from repro.queries import engine
@@ -176,10 +186,17 @@ def _signature(canon: CanonicalPredicate, radix: int, n_raw: int) -> Signature:
     return Signature(cb, gb, _radix_bucket(radix), vb)
 
 
-def _max_stack(table: Table, sig: Signature) -> int:
+def _max_stack(table: Table, sig: Signature, plane=None) -> int:
     """Largest power-of-two query stack that fits the element budget
-    (clause gather and segment-sum output are the two bulk tensors)."""
-    per_query = table.num_partitions * (
+    (clause gather and segment-sum output are the two bulk tensors).
+    Under a partition mesh the budget is per *device*, so the local
+    partition count is what multiplies in — deeper stacks fit as the
+    mesh grows."""
+    n_local = (
+        plane.local(table.num_partitions) if plane is not None
+        else table.num_partitions
+    )
+    per_query = n_local * (
         table.rows_per_partition * max(sig.num_clauses, sig.n_raw, 1)
         + sig.radix * sig.n_raw
     )
@@ -238,8 +255,14 @@ def _device_inputs(stack, col_idx, coefs, mults):
     return x, values, codes
 
 
-@functools.partial(jax.jit, static_argnames=("num_groups", "radix", "use_ref"))
-def _eval_stacked(stack, col_idx, lo, hi, gmap, coefs, mults, num_groups, radix, use_ref):
+def _eval_core(stack, col_idx, lo, hi, gmap, coefs, mults, *, num_groups, radix, use_ref):
+    """Mesh-oblivious driver body → (Q_b, P, V_b, radix) raw sums.
+
+    `stack` is whatever shard this program sees: the whole table on the
+    single-device path, one device's local partitions under `shard_map` —
+    the body never knows which, so the census key (local shapes) is the
+    same discipline either way.
+    """
     qb, cb = col_idx.shape
     p = stack.shape[1]
     TRACES.note("eval", qb * p, cb, num_groups, radix, coefs.shape[1])
@@ -252,13 +275,14 @@ def _eval_stacked(stack, col_idx, lo, hi, gmap, coefs, mults, num_groups, radix,
         # one-hot (disjoint) clause→group maps: OR within a group is sum>0
         grouped = jnp.einsum("bcr,bcg->bgr", clause.astype(jnp.float32), gmap_b)
         mask = jnp.all(grouped > 0.5, axis=1)
-        return _segment_aggregate(values, mask, codes, radix)
-    mask, _ = ops.predicate_eval_op(x, lo_b, hi_b, gmap_b, num_groups)
-    return ops.group_aggregate_op(values, mask, codes, radix)
+        out = _segment_aggregate(values, mask, codes, radix)
+    else:
+        mask, _ = ops.predicate_eval_op(x, lo_b, hi_b, gmap_b, num_groups)
+        out = ops.group_aggregate_op(values, mask, codes, radix)
+    return out.reshape(qb, p, out.shape[1], out.shape[2])
 
 
-@functools.partial(jax.jit, static_argnames=("radix", "use_ref"))
-def _eval_stacked_nopred(stack, coefs, mults, radix, use_ref):
+def _eval_nopred_core(stack, coefs, mults, *, radix, use_ref):
     qb = coefs.shape[0]
     p = stack.shape[1]
     TRACES.note("eval_nopred", qb * p, radix, coefs.shape[1])
@@ -267,8 +291,19 @@ def _eval_stacked_nopred(stack, coefs, mults, radix, use_ref):
     )
     mask = jnp.ones((values.shape[0], values.shape[2]), jnp.float32)
     if use_ref:
-        return _segment_aggregate(values, mask, codes, radix)
-    return ops.group_aggregate_op(values, mask, codes, radix)
+        out = _segment_aggregate(values, mask, codes, radix)
+    else:
+        out = ops.group_aggregate_op(values, mask, codes, radix)
+    return out.reshape(qb, p, out.shape[1], out.shape[2])
+
+
+_eval_stacked = jax.jit(_eval_core, static_argnames=("num_groups", "radix", "use_ref"))
+_eval_stacked_nopred = jax.jit(_eval_nopred_core, static_argnames=("radix", "use_ref"))
+
+# shard_map specs for the sharded launch: the stack is partitioned along
+# P, every per-query descriptor is replicated, answers come back P-major
+_STACK_SPEC = dataplane.partition_spec(3, 1)
+_OUT_SPEC = dataplane.partition_spec(4, 1)
 
 
 # --------------------------------------------------------------------------
@@ -339,15 +374,37 @@ def _run_chunk(
     for i, plan in enumerate(chunk):
         col_idx[i], lo[i], hi[i], gmap[i], coefs[i], mults[i] = _descriptor(plan, cache)
 
-    if sig.has_predicate:
-        out = _eval_stacked(
-            stack, col_idx, lo, hi, gmap, coefs, mults,
-            sig.num_groups, sig.radix, use_ref,
+    plane = cache.plane
+    if plane is None:
+        if sig.has_predicate:
+            out = _eval_stacked(
+                stack, col_idx, lo, hi, gmap, coefs, mults,
+                num_groups=sig.num_groups, radix=sig.radix, use_ref=use_ref,
+            )
+        else:
+            out = _eval_stacked_nopred(
+                stack, coefs, mults, radix=sig.radix, use_ref=use_ref
+            )
+    elif sig.has_predicate:
+        f = dataplane.sharded_call(
+            plane, _eval_core,
+            in_specs=(_STACK_SPEC,) + (dataplane.REPLICATED,) * 6,
+            out_specs=_OUT_SPEC,
+            static=(("num_groups", sig.num_groups), ("radix", sig.radix),
+                    ("use_ref", use_ref)),
         )
+        out = f(stack, col_idx, lo, hi, gmap, coefs, mults)
     else:
-        out = _eval_stacked_nopred(stack, coefs, mults, sig.radix, use_ref)
+        f = dataplane.sharded_call(
+            plane, _eval_nopred_core,
+            in_specs=(_STACK_SPEC, dataplane.REPLICATED, dataplane.REPLICATED),
+            out_specs=_OUT_SPEC,
+            static=(("radix", sig.radix), ("use_ref", use_ref)),
+        )
+        out = f(stack, coefs, mults)
 
-    out = np.asarray(out, np.float64).reshape(qb, n, sig.n_raw, sig.radix)
+    # [:, :n] slices off the mesh's zero pad partitions (no-op unsharded)
+    out = np.asarray(out, np.float64)[:, :n]
     answers = []
     for i, plan in enumerate(chunk):
         raw = out[i, :, : plan.n_raw, : plan.radix].transpose(0, 2, 1)
@@ -394,7 +451,7 @@ def eval_workload(
     for i, q in fallback:  # in-lists / != : exact-parity host path
         out[i] = engine._host_answers(table, q, cache)
     for sig, entries in grouped.items():
-        for chunk in _chunks(entries, _max_stack(table, sig)):
+        for chunk in _chunks(entries, _max_stack(table, sig, cache.plane)):
             answers = _run_chunk([p for _, p in chunk], cache, use_ref)
             for (i, _), ans in zip(chunk, answers):
                 out[i] = ans
@@ -453,10 +510,17 @@ def workload_census(
     """
     cache = cache or engine.EvalCache(table)
     grouped, _ = _plan_workload(table, queries, cache)
+    # census keys use the shapes each launch *sees*: local-shard partition
+    # counts under a mesh, the full table otherwise — so the key-set
+    # cardinality (the compile bound) is independent of mesh size
+    n_local = (
+        cache.plane.local(table.num_partitions) if cache.plane is not None
+        else table.num_partitions
+    )
     keys: set[tuple] = set()
     for sig, entries in grouped.items():
-        for chunk in _chunks(entries, _max_stack(table, sig)):
-            b = bucket_size(len(chunk), minimum=1) * table.num_partitions
+        for chunk in _chunks(entries, _max_stack(table, sig, cache.plane)):
+            b = bucket_size(len(chunk), minimum=1) * n_local
             if sig.has_predicate:
                 keys.add(
                     ("eval", b, sig.num_clauses, sig.num_groups, sig.radix, sig.n_raw)

@@ -211,10 +211,23 @@ class EvalCache:
     workload of 100 queries re-derives each a handful of times at most.
     The device driver additionally reads the float32 column images from
     here so the clause stacks share one cast per column.
+
+    ``plane`` selects the partition-axis device mesh for the device
+    backend ("auto" = the ``REPRO_MESH`` policy): under a mesh the device
+    column stack is held *sharded* along P, so every consumer — the query
+    driver, `AnswerStore`, the serving `BatchPicker` — runs
+    partition-parallel without changing.  Every accessor checks the
+    table's data version first: an in-place bulk append
+    (`concat_tables(into=)`) drops all cached intermediates instead of
+    serving snapshots of the smaller table.
     """
 
-    def __init__(self, table: Table):
+    def __init__(self, table: Table, plane="auto"):
+        from repro.distributed import dataplane
+
         self.table = table
+        self.plane = dataplane.resolve_plane(plane)
+        self._version = table.version
         self._codes: dict[tuple[str, ...], tuple[np.ndarray, int]] = {}
         self._f64: dict[str, np.ndarray] = {}
         self._f32: dict[str, np.ndarray] = {}
@@ -227,7 +240,21 @@ class EvalCache:
         self.codes_builds = 0
         self.cast_builds = 0
 
+    def _sync(self) -> None:
+        """Drop every cached intermediate if the table data moved on."""
+        if self.table.version == self._version:
+            return
+        self._codes.clear()
+        self._f64.clear()
+        self._f32.clear()
+        self._proj.clear()
+        self._posinf.clear()
+        self._nonfinite.clear()
+        self._stack = None
+        self._version = self.table.version
+
     def group_codes(self, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
+        self._sync()
         hit = self._codes.get(groupby)
         if hit is None:
             self.codes_builds += 1
@@ -235,6 +262,7 @@ class EvalCache:
         return hit
 
     def f64(self, col: str) -> np.ndarray:
+        self._sync()
         hit = self._f64.get(col)
         if hit is None:
             self.cast_builds += 1
@@ -244,6 +272,7 @@ class EvalCache:
     def has_posinf(self, col: str) -> bool:
         """+inf rows defeat the half-open interval form (`x < hi` can never
         admit x = inf), so clauses on such columns take the host path."""
+        self._sync()
         hit = self._posinf.get(col)
         if hit is None:
             hit = self._posinf[col] = bool(np.isposinf(self.table.columns[col]).any())
@@ -254,6 +283,7 @@ class EvalCache:
         contract zero coefficients against every column, and 0·inf = NaN),
         so aggregates over such columns take the host path and the stack is
         sanitized for the contraction inputs (`queries.device`)."""
+        self._sync()
         hit = self._nonfinite.get(col)
         if hit is None:
             hit = self._nonfinite[col] = not bool(
@@ -262,6 +292,7 @@ class EvalCache:
         return hit
 
     def f32(self, col: str) -> np.ndarray:
+        self._sync()
         hit = self._f32.get(col)
         if hit is None:
             data = self.table.columns[col]
@@ -277,14 +308,24 @@ class EvalCache:
         always-true padding clauses read it, so the device driver's only
         per-query inputs are small descriptors (indices / bounds /
         coefficients) — the table itself ships once per EvalCache.
+
+        Under a partition mesh the stack is zero-padded along P to a mesh
+        multiple and sharded on the partition axis, so each device holds
+        only its local partitions and the driver's `shard_map` launches
+        read them without any resharding.
         """
+        self._sync()
         if self._stack is None:
             import jax.numpy as jnp
 
             t = self.table
             rows = [self.f32(s.name) for s in t.schema]
             rows.append(np.ones((t.num_partitions, t.rows_per_partition), np.float32))
-            self._stack = jnp.asarray(np.stack(rows))
+            stack = np.stack(rows)
+            if self.plane is not None:
+                self._stack = self.plane.shard_partitions(stack, axis=1)
+            else:
+                self._stack = jnp.asarray(stack)
         return self._stack
 
     # distinct aggregate term tuples are unbounded across a serving
@@ -293,6 +334,7 @@ class EvalCache:
     PROJ_CAPACITY = 32
 
     def projection(self, agg: Aggregate) -> np.ndarray:
+        self._sync()
         if len(agg.terms) == 1 and agg.terms[0][0] == 1.0:
             return self.f64(agg.terms[0][1])  # identity projection: alias
         key = agg.terms
@@ -317,6 +359,12 @@ class AnswerStore:
     the cache instead of rescanning the table.  Misses in `get_batch` are
     evaluated together through `per_partition_answers_batch`, so a cold
     serving batch costs one stacked device pass, not Q host rescans.
+
+    Held answers are snapshots of the table's current data version: an
+    in-place bulk append (`concat_tables(into=)`) drops them all on the
+    next access — answers for the grown table must count its new
+    partitions, and every cached entry's (N, G, n_raw) raw tensor is
+    wrong the moment N changes.
     """
 
     def __init__(self, table: Table, capacity: int = 256, backend: str | None = None):
@@ -325,10 +373,22 @@ class AnswerStore:
         self.backend = backend
         self._cache: dict[str, PartitionAnswers] = {}
         self._eval_cache = EvalCache(table)
+        self._version = table.version
         self.hits = 0
         self.misses = 0
 
+    @property
+    def plane(self):
+        """The partition mesh the device backend evaluates on (or None)."""
+        return self._eval_cache.plane
+
+    def _sync(self) -> None:
+        if self.table.version != self._version:
+            self._cache.clear()
+            self._version = self.table.version
+
     def get(self, query: Query) -> PartitionAnswers:
+        self._sync()
         key = query_key(query)
         hit = self._cache.pop(key, None)
         if hit is not None:
@@ -344,6 +404,7 @@ class AnswerStore:
 
     def get_batch(self, queries: list[Query]) -> list[PartitionAnswers]:
         """Answers for a batch; all misses evaluated in one stacked pass."""
+        self._sync()
         keys = [query_key(q) for q in queries]
         # snapshot every pre-cached answer up front (non-destructively, so
         # an exception in the miss pass leaves the cache intact): the

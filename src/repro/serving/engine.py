@@ -141,6 +141,7 @@ class BatchPicker:
             count - self._eval_base.get(key, 0)
             for key, count in query_device.TRACES.counts().items()
         )
+        plane = self.answers.plane
         return {
             **self.stats.as_dict(),
             "shape_buckets": len(buckets),
@@ -148,6 +149,8 @@ class BatchPicker:
                 f"{kern}:n{nb}:k{kb}": c for (kern, nb, kb), c in buckets.items()
             },
             "eval_compiles": eval_compiles,  # device query-eval driver traces
+            # partition mesh the answer path evaluates on (1 = unsharded)
+            "mesh_devices": plane.num_devices if plane is not None else 1,
         }
 
 

@@ -1,0 +1,207 @@
+"""Multi-device data plane: mesh parity, padding, census, staleness.
+
+The contract under test (`distributed/dataplane.py`): sharded sketch
+construction and per-partition query answers are *bit-identical* to the
+single-device device backend on 1-, 2-, and 8-device meshes — including
+partition counts that do not divide the mesh size (padded partitions are
+masked, never double-counted) — and the compile census does not grow with
+mesh size.  Mesh sizes above the available device count are skipped; CI
+runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+so the real meshes are exercised on CPU-only runners.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ingest
+from repro.core.sketches import build_sketches
+from repro.data.datasets import make_dataset
+from repro.data.table import concat_tables
+from repro.distributed import dataplane
+from repro.queries import device
+from repro.queries.engine import AnswerStore, EvalCache, per_partition_answers_batch
+from repro.queries.generator import WorkloadSpec
+
+MESHES = (1, 2, 8)
+
+
+def _mesh_or_skip(d: int) -> int:
+    if d > len(jax.devices()):
+        pytest.skip(f"needs {d} devices, have {len(jax.devices())} "
+                    "(CI sets XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    return d
+
+
+@pytest.fixture(scope="module")
+def table():
+    # 12 partitions: divisible by 2, NOT by 8 — every 8-device test also
+    # exercises the zero-pad partitions
+    return make_dataset("tpch", num_partitions=12, rows_per_partition=256)
+
+
+@pytest.fixture(scope="module")
+def workload(table):
+    return WorkloadSpec(table, seed=3).sample_workload(16)
+
+
+@pytest.fixture(scope="module")
+def single_device_answers(table, workload):
+    return device.eval_workload(table, workload, cache=EvalCache(table, plane=None))
+
+
+# --------------------------------------------------------------------------
+# bit parity
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mesh", MESHES)
+def test_eval_parity_bit_exact(table, workload, single_device_answers, mesh):
+    """Sharded per-partition answers == single-device answers, bitwise —
+    the degenerate 1-device mesh IS today's path, larger meshes only
+    scatter the same per-partition programs across devices."""
+    _mesh_or_skip(mesh)
+    cache = EvalCache(table, plane=mesh)
+    assert cache.plane.num_devices == mesh
+    got = device.eval_workload(table, workload, cache=cache)
+    for ref, ans in zip(single_device_answers, got):
+        assert ans.raw.shape[0] == table.num_partitions
+        assert np.array_equal(ref.group_keys, ans.group_keys)
+        assert np.array_equal(ref.raw, ans.raw)
+
+
+@pytest.mark.parametrize("mesh", MESHES)
+def test_ingest_parity_bit_exact(table, mesh):
+    _mesh_or_skip(mesh)
+    ref = ingest.build_statistics(table, discrete_counts=True, plane=None)
+    got = ingest.build_statistics(table, discrete_counts=True, plane=mesh)
+    for col, tensors in ref.items():
+        for key, val in tensors.items():
+            assert np.array_equal(np.asarray(val), np.asarray(got[col][key])), (
+                col, key)
+
+
+@pytest.mark.parametrize("mesh", (2, 8))
+def test_sketch_parity_bit_exact(table, mesh):
+    """`build_sketches(backend="device")` end to end: every tensor the
+    funnel/picker reads is unchanged by the mesh."""
+    _mesh_or_skip(mesh)
+    ref = build_sketches(table, backend="device", plane=None)
+    got = build_sketches(table, backend="device", plane=mesh)
+    for name, a in ref.columns.items():
+        b = got.columns[name]
+        for field in ("measures", "hist_edges", "cat_counts", "ndv",
+                      "dv_freq", "hh_stats", "global_hh", "bitmap"):
+            x, y = getattr(a, field), getattr(b, field)
+            assert (x is None) == (y is None), (name, field)
+            if x is not None:
+                assert np.array_equal(x, y), (name, field)
+        assert a.hh_items == b.hh_items, name
+
+
+def test_padding_masked_not_double_counted():
+    """P=5 on a 2-device mesh pads to 6: the pad partition must appear in
+    no answer and shift no group total (host truth is the oracle)."""
+    _mesh_or_skip(2)
+    table = make_dataset("kdd", num_partitions=5, rows_per_partition=192)
+    queries = WorkloadSpec(table, seed=9).sample_workload(8)
+    host = per_partition_answers_batch(table, queries, backend="host")
+    sharded = device.eval_workload(
+        table, queries, cache=EvalCache(table, plane=2))
+    for h, s in zip(host, sharded):
+        assert s.raw.shape[0] == 5
+        assert np.array_equal(h.group_keys, s.group_keys)
+        assert np.array_equal(h.raw[..., 0], s.raw[..., 0])  # counts exact
+        np.testing.assert_allclose(h.raw, s.raw, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# compile census
+# --------------------------------------------------------------------------
+def test_census_bounded_and_mesh_independent(table, workload):
+    """One executable per census entry on every mesh size, the census
+    cardinality does not depend on the mesh, and warm reruns trace
+    nothing — the acceptance criterion for bounded compiles."""
+    sizes = {}
+    for mesh in MESHES:
+        if mesh > len(jax.devices()):
+            continue
+        cache = EvalCache(table, plane=mesh)
+        census = device.workload_census(table, workload, cache)
+        device.TRACES.reset()
+        device.eval_workload(table, workload, cache=cache)
+        assert set(device.TRACES.counts()) <= census
+        assert device.TRACES.total() <= len(census)
+        device.eval_workload(table, workload, cache=cache)  # warm: no growth
+        assert device.TRACES.total() <= len(census)
+        sizes[mesh] = len(census)
+    assert len(set(sizes.values())) == 1, sizes
+
+
+def test_ingest_census_warm_reruns_trace_nothing(table):
+    mesh = min(2, len(jax.devices()))
+    ingest.build_statistics(table, discrete_counts=True, plane=mesh)
+    ingest.TRACES.reset()
+    ingest.build_statistics(table, discrete_counts=True, plane=mesh)
+    assert ingest.TRACES.total() == 0
+
+
+# --------------------------------------------------------------------------
+# mesh resolution
+# --------------------------------------------------------------------------
+def test_resolve_plane_env_policy(monkeypatch):
+    monkeypatch.delenv("REPRO_MESH", raising=False)
+    assert dataplane.resolve_plane("auto") is None
+    monkeypatch.setenv("REPRO_MESH", "0")
+    assert dataplane.resolve_plane("auto") is None
+    monkeypatch.setenv("REPRO_MESH", "1")
+    plane = dataplane.resolve_plane("auto")
+    assert plane is not None and plane.num_devices == 1
+    monkeypatch.setenv("REPRO_MESH", "auto")
+    assert dataplane.resolve_plane("auto").num_devices == len(jax.devices())
+    assert dataplane.resolve_plane(None) is None
+    assert dataplane.resolve_plane(plane) is plane
+
+
+def test_plane_geometry():
+    plane = dataplane.resolve_plane(1)
+    assert plane.padded(5) == 5 and plane.local(5) == 5
+    if len(jax.devices()) >= 2:
+        plane = dataplane.resolve_plane(2)
+        assert plane.padded(5) == 6 and plane.local(5) == 3
+        assert plane.padded(4) == 4 and plane.local(4) == 2
+
+
+# --------------------------------------------------------------------------
+# bulk-append invalidation (regression: stale answers after concat_tables)
+# --------------------------------------------------------------------------
+def test_bulk_append_invalidates_answer_store():
+    """`concat_tables(into=)` must invalidate the AnswerStore and the
+    EvalCache device stack: before the fix, the store kept serving the
+    pre-append (N, G, n_raw) answers for the grown table."""
+    table = make_dataset("kdd", num_partitions=6, rows_per_partition=128)
+    extra = make_dataset("kdd", num_partitions=4, rows_per_partition=128,
+                         layout="random", seed=7)
+    queries = WorkloadSpec(table, seed=4).sample_workload(6)
+    store = AnswerStore(table, backend="host")
+    before = store.get_batch(queries)
+    assert all(a.raw.shape[0] == 6 for a in before)
+    stack_before = store._eval_cache.device_stack()
+
+    grown = concat_tables([extra], into=table)
+    assert grown is table and table.num_partitions == 10
+    assert table.version == 1
+
+    after = store.get_batch(queries)
+    fresh = per_partition_answers_batch(table, queries, backend="host")
+    for a, f in zip(after, fresh):
+        assert a.raw.shape[0] == 10
+        assert np.array_equal(a.group_keys, f.group_keys)
+        assert np.array_equal(a.raw, f.raw)
+    stack_after = store._eval_cache.device_stack()
+    assert stack_after.shape[1] >= 10 > stack_before.shape[1]
+
+
+def test_bulk_append_without_into_is_pure():
+    table = make_dataset("kdd", num_partitions=3, rows_per_partition=128)
+    out = concat_tables([table, table])
+    assert out is not table
+    assert out.num_partitions == 6 and table.num_partitions == 3
+    assert table.version == 0
