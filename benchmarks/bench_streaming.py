@@ -1,0 +1,147 @@
+"""Streaming ingest benchmark: incremental append vs cold full rebuild.
+
+Measures the streaming plane end to end on the device backend: a table
+with reserved stack slack receives K successive partition appends, and
+after each one the incrementally maintained structures (sketches via
+`SketchStore`, per-partition answers via `AnswerStore`, the device column
+stack via `EvalCache`) are brought current.  The same work is then done
+the pre-streaming way — a cold `build_sketches` + full re-evaluation of
+the workload on the grown table — and the within-run ratio is the gated
+metric (machine speed cancels; `check_regression.py`).
+
+The in-run assertions are part of the benchmark's contract: in-bucket
+appends must compile *nothing* (the census-flat guarantee), and the
+incremental results must be bit-identical to the cold rebuild.
+
+``append_scale`` is the amortized-cost evidence: the same append against
+a 2× larger base table should cost about the same (O(delta), not O(P)) —
+report-only, it sits near the noise floor on small grids.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import timed as _timed, write_result
+from repro.core import ingest
+from repro.core.sketches import SketchStore, build_sketches
+from repro.data.datasets import make_dataset
+from repro.data.table import append_partitions
+from repro.distributed import dataplane
+from repro.queries import device
+from repro.queries.engine import AnswerStore, EvalCache, per_partition_answers_batch
+from repro.queries.generator import WorkloadSpec
+
+
+def _all_traces() -> int:
+    """Every streaming-relevant census: query eval + ingest kernels +
+    stack writes — 'in-bucket appends compile nothing' must hold for all
+    three, not just the eval driver."""
+    return device.TRACES.total() + ingest.TRACES.total() + dataplane.TRACES.total()
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+# base P sits below its power-of-two bucket so the warm-up + timed appends
+# all land in the reserved slack; enough timed appends that the
+# incremental wall clears check_regression's 0.15 s noise floor
+BASE_PARTS = 40 if QUICK else (88 if not FULL else 184)
+ROWS = 512 if QUICK else (1024 if not FULL else 2048)
+N_QUERIES = 16 if QUICK else 32
+APPEND_PARTS = 3
+N_APPENDS = 6
+
+
+def _mk(parts, rows, seed=0, layout="sorted"):
+    return make_dataset("tpch", num_partitions=parts, rows_per_partition=rows,
+                        layout=layout, seed=seed)
+
+
+def _append_stream(base_parts, rows):
+    """(incremental seconds, telemetry) for N_APPENDS appends."""
+    table = _mk(base_parts, rows)
+    queries = WorkloadSpec(table, seed=77).sample_workload(N_QUERIES)
+    sketches = SketchStore(table, backend="device", plane=None)
+    answers = AnswerStore(table, backend="device", plane=None)
+    answers.get_batch(queries)  # warm: compile + fill the LRU
+    traces0 = _all_traces()
+
+    def one_append(delta):
+        append_partitions(table, delta)
+        sketches.sketches()
+        return answers.get_batch(queries)
+
+    # warm-up append: compiles the delta-shape evaluators once (counted in
+    # stream_compiles, excluded from the timed steps like every warm bench)
+    one_append(_mk(APPEND_PARTS, rows, seed=99, layout="random"))
+    compiles = _all_traces() - traces0
+    traces_warm = _all_traces()
+    total = 0.0
+    for step in range(N_APPENDS):
+        _, t = _timed(one_append, _mk(APPEND_PARTS, rows, seed=100 + step,
+                                      layout="random"))
+        total += t
+    # census-flat contract: after the warm-up append, every further
+    # same-sized in-bucket append compiles NOTHING — across the eval
+    # driver, the ingest kernels, AND the stack-write path
+    assert _all_traces() == traces_warm, (_all_traces(), traces_warm)
+    assert answers._eval_cache.stack_appends == N_APPENDS + 1
+    return total, compiles, table, queries, sketches, answers
+
+
+def run():
+    res: dict = {"base_partitions": BASE_PARTS, "rows_per_partition": ROWS,
+                 "append_partitions": APPEND_PARTS, "appends": N_APPENDS,
+                 "queries": N_QUERIES}
+
+    t_incr, compiles, table, queries, sketches, answers = _append_stream(
+        BASE_PARTS, ROWS)
+
+    # the pre-streaming cost of the same growth: full rebuild per append
+    def cold_rebuild():
+        sk = build_sketches(table, backend="device", plane=None)
+        ans = per_partition_answers_batch(
+            table, queries, backend="device", cache=EvalCache(table, plane=None)
+        )
+        return sk, ans
+    cold_rebuild()  # compile the grown-table ingest shapes
+    (cold_sk, cold_ans), t_cold_once = _timed(cold_rebuild)
+    t_cold = t_cold_once * N_APPENDS  # one rebuild per append step
+
+    # bit-parity of the stream against the cold rebuild (contract, not perf)
+    incr_ans = answers.get_batch(queries)
+    for a, b in zip(incr_ans, cold_ans):
+        assert np.array_equal(a.raw, b.raw)
+    incr_sk = sketches.sketches()
+    for name, cs in cold_sk.columns.items():
+        assert np.array_equal(cs.measures, incr_sk.columns[name].measures)
+
+    res["incr_total_s"] = t_incr
+    res["cold_total_s"] = t_cold
+    res["stream_speedup"] = t_cold / max(t_incr, 1e-9)
+    appended = APPEND_PARTS * N_APPENDS
+    res["incr_ms_per_appended_part"] = 1e3 * t_incr / appended
+    res["cold_ms_per_appended_part"] = 1e3 * t_cold / appended
+    # first-append delta-shape compiles only; flat afterwards (asserted)
+    res["stream_compiles"] = int(compiles)
+    res["answers_carried"] = answers.carried
+    res["stack_appends"] = answers._eval_cache.stack_appends
+
+    # O(delta) evidence: the same append stream against a 2× base table
+    t_incr2, _, *_ = _append_stream(BASE_PARTS * 2, ROWS)
+    res["incr_total_2x_s"] = t_incr2
+    res["append_scale"] = t_incr2 / max(t_incr, 1e-9)  # ~1 ⇒ cost tracks delta
+
+    print(f"[bench_streaming] {N_APPENDS}×{APPEND_PARTS} appends on "
+          f"{BASE_PARTS}×{ROWS}: incremental {t_incr:.3f}s vs cold rebuild "
+          f"{t_cold:.3f}s (speedup {res['stream_speedup']:.1f}×); "
+          f"2× base table scale {res['append_scale']:.2f} (report-only); "
+          f"census flat, {res['answers_carried']} answers carried")
+
+    write_result("bench_streaming", {"streaming": res})
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -41,6 +41,11 @@ GATED = {
     "weak_scaling_gate": (
         "higher", ("sketch_d1_s", "eval_d1_s", "sketch_dmax_s", "eval_dmax_s")
     ),
+    # bench_streaming: incremental-append vs cold-rebuild ratio (within-run,
+    # machine speed cancels) + the deterministic first-append compile count;
+    # append_scale is report-only — it compares two separately-warmed runs
+    "stream_speedup": ("higher", ("incr_total_s", "cold_total_s")),
+    "stream_compiles": ("lower", ()),
 }
 MIN_BASIS_SECONDS = 0.15
 

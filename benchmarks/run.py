@@ -21,6 +21,7 @@ MODULES = [
     "bench_offline",
     "bench_train",
     "bench_distributed",
+    "bench_streaming",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",

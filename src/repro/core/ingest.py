@@ -19,6 +19,15 @@ The AKMV hash path is vector-friendly and runs as plain XLA (hash +
 top_k); equi-depth edge *placement* requires a global sort which XLA
 already lowers optimally, so only the counting passes use custom kernels
 (DESIGN §3, hardware-adaptation notes).
+
+**Streaming merge path.**  All of these statistics are *mergeable*:
+moments combine by count-weighted sums (+ min/max), histogram and
+bincount tensors add elementwise, and the AKMV sketch merges by k-min
+union (`core/sketches.py`).  `delta_statistics` computes tensors for
+only the partitions appended since a snapshot and `merge_statistics`
+reassembles the full-table result bit-identically — the O(new
+partitions) ingest that keeps per-partition statistics maintainable
+under data growth (docs/architecture.md, "streaming ingest plane").
 """
 from __future__ import annotations
 
@@ -74,7 +83,7 @@ def _per_partition(plane, core, arrays, num_partitions, **static) -> np.ndarray:
     device, or sharded along P with the pad partitions sliced off."""
     arrays = [_partition_resident(plane, a) for a in arrays]
     if plane is None:
-        return np.asarray(_JIT_OF[core](*arrays, **static))
+        return np.asarray(_JIT_OF[core](*arrays, **static))[:num_partitions]
     f = dataplane.sharded_call(
         plane, core,
         in_specs=(_ROW_SPEC,) * len(arrays), out_specs=_ROW_SPEC,
@@ -105,15 +114,125 @@ def measures_from_moments(raw: np.ndarray, rows: int, positive: bool) -> np.ndar
     return out
 
 
-def discrete_span(data: np.ndarray, max_width: int = 4096) -> tuple[int, int] | None:
-    """(lo, width) when a numeric column is integer-valued with a small
-    range — the case where exact heavy-hitter counts apply — else None."""
+def int_span(data: np.ndarray) -> tuple[int, int] | None:
+    """(lo, hi) inclusive integer span of an integer-valued numeric column,
+    or None when any value is non-integral (no width cap — the raw
+    mergeable form `merge_statistics` combines across appends)."""
+    if data.size == 0:
+        return None
     codes = data.astype(np.int64)
     if not np.all(data == codes):
         return None
-    lo = int(codes.min())
-    width = int(codes.max()) - lo + 1
+    return int(codes.min()), int(codes.max())
+
+
+MAX_DISCRETE_WIDTH = 4096
+
+
+def discrete_span(data: np.ndarray, max_width: int = MAX_DISCRETE_WIDTH) -> tuple[int, int] | None:
+    """(lo, width) when a numeric column is integer-valued with a small
+    range — the case where exact heavy-hitter counts apply — else None."""
+    span = int_span(data)
+    if span is None:
+        return None
+    lo, hi = span
+    width = hi - lo + 1
     return (lo, width) if width <= max_width else None
+
+
+def merge_discrete_span(
+    old_span: tuple[int, int] | None,
+    new_span: tuple[int, int] | None,
+    max_width: int = MAX_DISCRETE_WIDTH,
+) -> tuple[int, int] | None:
+    """Union of two observed inclusive (lo, hi) integer spans, or None
+    when either side is disqualified (non-integral values, or never
+    qualified) or the union exceeds the width cap.
+
+    The single implementation of the cold pass's qualification rule for
+    merges — `merge_statistics` and `core.sketches.update_sketches` both
+    route through it, so an append widening a span past the cap (or a
+    non-integral value arriving) disqualifies the column exactly as a
+    cold `discrete_span` over the grown column would.
+    """
+    if old_span is None or new_span is None:
+        return None
+    lo = min(old_span[0], new_span[0])
+    hi = max(old_span[1], new_span[1])
+    return (lo, hi) if hi - lo + 1 <= max_width else None
+
+
+# --------------------------------------------------------------------------
+# mergeable-statistic primitives (streaming ingest)
+# --------------------------------------------------------------------------
+# Raw kernel-moment layout (see `_moments_core` / `measures_from_moments`):
+# [min, max, sum, sumsq, logmin, logmax, logsum, logsumsq].  Sums add,
+# extrema combine by min/max — so two row-chunks of the same partitions
+# merge in O(P) regardless of chunk size, and the count weighting falls
+# out of `measures_from_moments(merged, rows_a + rows_b)`.
+#
+# The row-chunk merge primitives (`merge_moments`, `merge_bincounts`, the
+# AKMV trio in `core/sketches.py`) are the mergeable-summary foundation;
+# the *live* append path is partition-granular (`delta_statistics` +
+# `merge_statistics`, `update_sketches`) and only exercises the span
+# realignment — the row-chunk forms are held correct by
+# `tests/test_streaming_ingest.py` as the paper-level mergeability
+# property and as oracles for any future sub-partition streaming.
+_MOMENT_MERGE = ("min", "max", "add", "add", "min", "max", "add", "add")
+
+
+def merge_moments(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Merge raw (P, 8) kernel moments of two row-chunks of the same
+    partitions.  Exact for min/max and integer-valued sums; float sums are
+    re-associated (chunk partials added instead of one long fold), so a
+    merged result matches the one-shot kernel to f32 rounding, not
+    bitwise.  The streaming *partition-append* path never calls this on
+    overlapping partitions — appended partitions fold their rows in one
+    pass, which is how the append plane stays bit-identical to a cold
+    rebuild."""
+    out = np.empty_like(a)
+    for i, how in enumerate(_MOMENT_MERGE):
+        if how == "add":
+            out[:, i] = a[:, i] + b[:, i]
+        elif how == "min":
+            out[:, i] = np.minimum(a[:, i], b[:, i])
+        else:
+            out[:, i] = np.maximum(a[:, i], b[:, i])
+    return out
+
+
+def merge_bincounts(
+    a: np.ndarray, b: np.ndarray, lo_a: int = 0, lo_b: int = 0
+) -> tuple[np.ndarray, int]:
+    """Elementwise-add two (P, width) count tensors whose first bins sit at
+    absolute values ``lo_a`` / ``lo_b``; returns (merged, lo_merged).
+
+    Counts are exact integers (held in float64), so aligning into the
+    union span and adding is bit-identical to counting the union directly
+    — the property the discrete heavy-hitter merge in `merge_statistics`
+    relies on when an append widens a column's observed span."""
+    lo = min(lo_a, lo_b)
+    hi = max(lo_a + a.shape[1], lo_b + b.shape[1])
+    out = np.zeros((a.shape[0], hi - lo), np.float64)
+    out[:, lo_a - lo : lo_a - lo + a.shape[1]] += a
+    out[:, lo_b - lo : lo_b - lo + b.shape[1]] += b
+    return out, lo
+
+
+def _embed_counts(counts: np.ndarray, lo: int, new_lo: int, new_width: int) -> np.ndarray:
+    """Zero-embed (P, w) counts at span ``lo`` into a wider span."""
+    out = np.zeros((counts.shape[0], new_width), np.float64)
+    off = lo - new_lo
+    out[:, off : off + counts.shape[1]] = counts
+    return out
+
+
+def _pad_partitions(arr: np.ndarray, target: int) -> np.ndarray:
+    pad = target - arr.shape[0]
+    if pad <= 0:
+        return arr
+    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, widths)
 
 
 def build_statistics(
@@ -121,6 +240,7 @@ def build_statistics(
     use_ref: bool = False,
     discrete_counts: bool = False,
     plane="auto",
+    partitions: tuple[int, int] | None = None,
 ) -> dict[str, dict]:
     """Kernel-computed per-column statistics tensors.
 
@@ -134,21 +254,41 @@ def build_statistics(
     ``plane`` selects the partition mesh ("auto" = the ``REPRO_MESH``
     policy): each counting pass then runs one launch per device over its
     local partitions, bit-identical to the single-device tensors.
+
+    ``partitions`` restricts the pass to a half-open partition range — the
+    streaming-ingest *delta* path (`delta_statistics`): only the named
+    partitions are read, so an append costs O(new partitions), not O(P).
+    Delta ranges are zero-padded up to a power-of-two partition bucket
+    before the kernels run (pad rows are sliced off before anything reads
+    them), so a stream of arbitrary append sizes keeps the `TRACES`
+    compile census at the bucket count instead of one entry per size.
+    Every per-partition tensor is computed exactly as the full pass would
+    — same kernels, same per-partition fold order — which is what lets
+    `merge_statistics` reassemble a bit-identical full-table result.
     """
+    from repro.core.clustering import bucket_size
+
     plane = dataplane.resolve_plane(plane)
     out: dict[str, dict] = {}
-    p = table.num_partitions
+    lo_part, hi_part = partitions if partitions is not None else (0, table.num_partitions)
+    p = hi_part - lo_part
+    delta = partitions is not None
+    # delta passes pad to a bucket so the census stays bounded; the full
+    # pass keeps its exact-P shapes (unchanged cold-path behavior)
+    pb = bucket_size(p, minimum=1) if delta else p
     rows = table.rows_per_partition
     for spec in table.schema:
-        data = table.columns[spec.name]
+        data = table.columns[spec.name][lo_part:hi_part]
         if spec.kind == NUMERIC:
-            x = _partition_resident(plane, data)  # ships once, feeds both cores
+            # ships once, feeds both counting cores
+            x = _partition_resident(plane, _pad_partitions(data, pb))
             mom = _per_partition(plane, _moments_core, (x,), p, use_ref=use_ref)
             edges = np.quantile(
                 data.astype(np.float64), np.linspace(0, 1, 11), axis=1
             ).T
             hist = _per_partition(
-                plane, _hist_core, (x, edges.astype(np.float32)), p,
+                plane, _hist_core,
+                (x, _pad_partitions(edges.astype(np.float32), pb)), p,
                 use_ref=use_ref,
             )
             out[spec.name] = {
@@ -158,19 +298,113 @@ def build_statistics(
             }
             if discrete_counts:
                 span = discrete_span(data)
+                if delta:
+                    # raw integer span of the delta rows (None = a non-
+                    # integral value arrived): merge_statistics needs it to
+                    # decide whether the merged column still qualifies
+                    out[spec.name]["discrete_range_span"] = int_span(data)
                 if span is not None:
                     lo, width = span
                     codes = (data.astype(np.int64) - lo).astype(np.int32)
+                    # delta passes bucket the bin count too: the observed
+                    # span width varies with every delta's data, and an
+                    # exact-width kernel would re-trace per append; the
+                    # pad bins receive no codes and are sliced off
+                    wb = bucket_size(width, minimum=1) if delta else width
                     counts = _per_partition(
-                        plane, _bincount_core, (codes,), p,
-                        card=width, use_ref=use_ref,
-                    )
+                        plane, _bincount_core, (_pad_partitions(codes, pb),), p,
+                        card=wb, use_ref=use_ref,
+                    )[:, :width]
                     out[spec.name]["discrete_counts"] = counts.astype(np.float64)
                     out[spec.name]["discrete_lo"] = lo
         else:
             counts = _per_partition(
-                plane, _bincount_core, (data,), p,
+                plane, _bincount_core, (_pad_partitions(data, pb),), p,
                 card=spec.cardinality, use_ref=use_ref,
             )
             out[spec.name] = {"counts": counts.astype(np.float64)}
+    return out
+
+
+def delta_statistics(
+    table: Table,
+    start: int,
+    use_ref: bool = False,
+    discrete_counts: bool = False,
+    plane="auto",
+) -> dict[str, dict]:
+    """Statistics tensors for only the partitions appended at/after
+    ``start`` — the O(new partitions) half of the streaming ingest plane.
+    Feed the result to `merge_statistics` together with the pre-append
+    tensors to obtain the full-table statistics bit-identically."""
+    return build_statistics(
+        table, use_ref=use_ref, discrete_counts=discrete_counts, plane=plane,
+        partitions=(start, table.num_partitions),
+    )
+
+
+def merge_statistics(
+    old: dict[str, dict], delta: dict[str, dict]
+) -> dict[str, dict]:
+    """Merge pre-append statistics with a `delta_statistics` result.
+
+    Per-partition tensors (measures, histogram edges/counts, categorical
+    counts) concatenate along P — appended partitions never touch existing
+    rows, so the merge is bit-identical to a cold `build_statistics` over
+    the grown table.  Discrete heavy-hitter counts are the one *global*
+    tensor: their span is the column's observed integer range, so an
+    append can widen it (both sides are re-embedded into the union span —
+    exact, see `merge_bincounts`), push its width past
+    ``MAX_DISCRETE_WIDTH``, or break integrality entirely (the counts are
+    dropped, exactly as the cold pass would decide).
+    """
+    out: dict[str, dict] = {}
+    for col, old_t in old.items():
+        new_t = delta[col]
+        merged: dict = {}
+        if "counts" in old_t:  # categorical: fixed cardinality, concat
+            merged["counts"] = np.concatenate(
+                [old_t["counts"], new_t["counts"]], axis=0
+            )
+            out[col] = merged
+            continue
+        merged["measures"] = np.concatenate(
+            [old_t["measures"], new_t["measures"]], axis=0
+        )
+        merged["hist_edges"] = np.concatenate(
+            [old_t["hist_edges"], new_t["hist_edges"]], axis=0
+        )
+        merged["hist_counts"] = np.concatenate(
+            [old_t["hist_counts"], new_t["hist_counts"]], axis=0
+        )
+        if "discrete_range_span" in new_t or "discrete_counts" in old_t:
+            dspan = new_t.get("discrete_range_span")
+            old_counts = old_t.get("discrete_counts")
+            delta_p = new_t["measures"].shape[0]
+            if delta_p == 0:  # empty append: the old tensors stand
+                if old_counts is not None:
+                    merged["discrete_counts"] = old_counts
+                    merged["discrete_lo"] = old_t["discrete_lo"]
+            elif old_counts is not None:
+                lo_old = old_t["discrete_lo"]
+                span = merge_discrete_span(
+                    (lo_old, lo_old + old_counts.shape[1] - 1), dspan
+                )
+                if span is not None:
+                    # union span; realigning exact integer counts is exact
+                    lo, hi = span
+                    width = hi - lo + 1
+                    merged["discrete_counts"] = np.concatenate(
+                        [
+                            _embed_counts(old_counts, lo_old, lo, width),
+                            _embed_counts(
+                                new_t["discrete_counts"], new_t["discrete_lo"],
+                                lo, width,
+                            ),
+                        ],
+                        axis=0,
+                    )
+                    merged["discrete_lo"] = lo
+            # else: span broken or width blown — drop, like the cold pass
+        out[col] = merged
     return out

@@ -80,6 +80,10 @@ class ColumnSketch:
     hh_items: list[dict[int, float]] | None  # per-partition {code: freq} (cat)
     global_hh: np.ndarray | None  # (K,) codes of global heavy hitters
     bitmap: np.ndarray | None  # (N, K) occurrence bitmap (group-by columns)
+    # observed (lo, hi) integer span behind the discrete-numeric heavy
+    # hitters, None when the column does not qualify — `update_sketches`
+    # needs it to merge the span decision without re-reading old partitions
+    discrete_span: tuple[int, int] | None = None
 
 
 @dataclasses.dataclass
@@ -177,6 +181,90 @@ def _akmv_reference(col: np.ndarray, k: int = AKMV_K):
     return ndv, freq
 
 
+def akmv_state(col: np.ndarray, k: int = AKMV_K):
+    """Mergeable AKMV state per partition: ``(hashes, counts, d)``.
+
+    ``hashes`` (N, k) holds the k *minimum* distinct hashed values in
+    ascending order (padded with +inf), ``counts`` (N, k) their exact
+    multiplicities, ``d`` (N,) the exact distinct count of the rows this
+    state saw.  Two states over disjoint row-chunks of the same partitions
+    merge by k-min union (`merge_akmv_states`) — the classic KMV property:
+    the k minima of the union are always contained in the union of each
+    side's k minima — and `akmv_finalize` reproduces `_akmv`'s (ndv,
+    dv_freq) bit-identically, which is what makes the AKMV sketch
+    maintainable under streaming ingest without re-hashing old rows.
+    """
+    n, r = col.shape
+    hs = np.sort(hash_u64(col.reshape(-1)).reshape(n, r), axis=1)
+    new = np.ones((n, r), bool)
+    new[:, 1:] = hs[:, 1:] != hs[:, :-1]
+    rid = np.cumsum(new, axis=1) - 1
+    d = (rid[:, -1] + 1).astype(np.float64)
+    seg = (rid + np.arange(n, dtype=np.int64)[:, None] * r).reshape(-1)
+    cnts = np.bincount(seg, minlength=n * r).reshape(n, r).astype(np.float64)
+    hashes = np.full((n, k), np.inf)
+    counts = np.zeros((n, k))
+    mask = new & (rid < k)
+    ii, pos = np.nonzero(mask)
+    run = rid[ii, pos]
+    hashes[ii, run] = hs[ii, pos]
+    counts[ii, run] = cnts[ii, run]
+    return hashes, counts, d
+
+
+def merge_akmv_states(a, b, k: int = AKMV_K):
+    """K-min union of two `akmv_state` results over disjoint row sets.
+
+    Multiplicities of hashes retained on both sides add exactly (integer
+    counts in float64); the merged exact-distinct count ``d`` survives
+    only while both sides retained *all* their distinct hashes (d ≤ k) —
+    once either side truncated, the merged d is +inf, which routes
+    `akmv_finalize` down the (k-1)/U_(k) estimator exactly as a one-shot
+    build over the union rows would.
+    """
+    ha, ca, da = a
+    hb, cb, db = b
+    h = np.concatenate([ha, hb], axis=1)
+    c = np.concatenate([ca, cb], axis=1)
+    order = np.argsort(h, axis=1, kind="stable")
+    h = np.take_along_axis(h, order, axis=1)
+    c = np.take_along_axis(c, order, axis=1)
+    n, m = h.shape
+    new = np.ones((n, m), bool)
+    new[:, 1:] = h[:, 1:] != h[:, :-1]
+    rid = np.cumsum(new, axis=1) - 1
+    seg = (rid + np.arange(n, dtype=np.int64)[:, None] * m).reshape(-1)
+    csum = np.bincount(seg, weights=c.reshape(-1), minlength=n * m).reshape(n, m)
+    finite = np.isfinite(h)
+    hashes = np.full((n, k), np.inf)
+    counts = np.zeros((n, k))
+    mask = new & (rid < k) & finite
+    ii, pos = np.nonzero(mask)
+    run = rid[ii, pos]
+    hashes[ii, run] = h[ii, pos]
+    counts[ii, run] = csum[ii, run]
+    exact = (da <= k) & (db <= k)
+    d = np.where(exact, (new & finite).sum(axis=1).astype(np.float64), np.inf)
+    return hashes, counts, d
+
+
+def akmv_finalize(state, k: int = AKMV_K):
+    """(ndv, dv_freq) from an AKMV state — bit-identical to `_akmv` run
+    over the same (unioned) rows."""
+    h, c, d = state
+    valid = np.isfinite(h)
+    m = valid.sum(axis=1)
+    csum = c.sum(axis=1)
+    freq = np.stack(
+        [csum / m, c.max(axis=1), np.where(valid, c, np.inf).min(axis=1), csum],
+        axis=1,
+    )
+    with np.errstate(divide="ignore"):
+        est = (k - 1) / np.maximum(h[:, k - 1], 1e-12)
+    ndv = np.where(d <= k, d, est)
+    return ndv, freq
+
+
 def _partition_bincount(codes: np.ndarray, card: int) -> np.ndarray:
     """(N, R) int codes → (N, card) exact counts, one vectorized bincount."""
     n, r = codes.shape
@@ -248,6 +336,11 @@ def build_sketches(
     ``plane`` (device backend only) selects the partition mesh for the
     ingest kernels ("auto" = the ``REPRO_MESH`` policy); sharded sketches
     are bit-identical to single-device ones (`distributed/dataplane.py`).
+
+    This is the *cold* build — O(P).  When the table grows through
+    in-place partition appends, `update_sketches` (or the version-tracked
+    `SketchStore`) extends an existing result in O(new partitions),
+    bit-identical to re-running this function on the grown table.
     """
     from repro.backends import resolve_backend
 
@@ -292,12 +385,14 @@ def build_sketches(
                 hh_items = [
                     {k + lo: v for k, v in d.items()} for d in hh_items
                 ]
+                span = (lo, lo + counts.shape[1] - 1)
             else:
                 hh_stats = np.zeros((n, 3), np.float64)
                 hh_items = [dict() for _ in range(n)]
+                span = None
             cols[spec.name] = ColumnSketch(
                 spec.name, NUMERIC, measures, edges, None, ndv, dv_freq,
-                hh_stats, hh_items, None, None,
+                hh_stats, hh_items, None, None, discrete_span=span,
             )
         else:
             card = spec.cardinality
@@ -321,6 +416,179 @@ def build_sketches(
                 ndv, dv_freq, hh_stats, hh_items, ghh, bitmap,
             )
     return TableSketches(table.name, n, table.rows_per_partition, cols)
+
+
+# --------------------------------------------------------------------------
+# streaming ingest: incremental sketch maintenance
+# --------------------------------------------------------------------------
+def update_sketches(
+    sk: TableSketches,
+    table: Table,
+    start: int,
+    backend: str | None = None,
+    use_ref: bool | None = None,
+    plane="auto",
+) -> TableSketches:
+    """Extend ``sk`` (built when ``table`` had ``start`` partitions) to
+    cover partitions appended at/after ``start`` — O(new partitions).
+
+    Per-partition sketch rows (measures, histogram, AKMV, heavy hitters)
+    are computed for only the delta partitions — through
+    `core.ingest.delta_statistics` on the device backend, host numpy
+    otherwise — and concatenated; the *global* state is merged:
+
+      * discrete-numeric heavy hitters: the observed integer span widens
+        with the union (`ColumnSketch.discrete_span`); if the append
+        pushes it past the width cap or breaks integrality, the column
+        stops qualifying for every partition, exactly as a cold rebuild
+        would decide;
+      * categorical global heavy hitters + occurrence bitmaps: recomputed
+        from the merged exact count tensors (O(P·card), no row reads).
+
+    The result is bit-identical to ``build_sketches`` on the grown table
+    with the same backend/plane (asserted in
+    ``tests/test_streaming_ingest.py`` on 1/2/8-device meshes).  Returns a
+    new `TableSketches`; the input is not mutated.
+    """
+    from repro.backends import resolve_backend
+    from repro.core.ingest import discrete_span, int_span, merge_discrete_span
+
+    backend = resolve_backend(backend)
+    if sk.num_partitions != start:
+        raise ValueError(
+            f"sketch snapshot covers {sk.num_partitions} partitions, "
+            f"append starts at {start}"
+        )
+    if sk.rows_per_partition != table.rows_per_partition:
+        raise ValueError("rows_per_partition changed: not an append")
+    n = table.num_partitions
+    dp = n - start
+    if dp == 0:
+        return dataclasses.replace(sk)
+
+    stats: dict[str, dict] = {}
+    if backend == "device":
+        from repro.backends import kernels_use_ref
+        from repro.core.ingest import delta_statistics
+
+        stats = delta_statistics(
+            table, start, use_ref=kernels_use_ref(use_ref),
+            discrete_counts=True, plane=plane,
+        )
+
+    cols: dict[str, ColumnSketch] = {}
+    for spec in table.schema:
+        data = table.columns[spec.name][start:]
+        old = sk.columns[spec.name]
+        ndv_d, dv_freq_d = _akmv(data)
+        ndv = np.concatenate([old.ndv, ndv_d])
+        dv_freq = np.concatenate([old.dv_freq, dv_freq_d], axis=0)
+        if spec.kind == NUMERIC:
+            if backend == "device":
+                measures_d = stats[spec.name]["measures"]
+                edges_d = stats[spec.name]["hist_edges"]
+                counts_d = stats[spec.name].get("discrete_counts")
+                lo_d = stats[spec.name].get("discrete_lo", 0)
+            else:
+                measures_d = _measures(data, spec.positive)
+                edges_d = _equi_depth_edges(data)
+                counts_d = None
+                lo_d = 0
+                dspan = discrete_span(data)
+                if dspan is not None:
+                    lo_d, width = dspan
+                    counts_d = _partition_bincount(
+                        data.astype(np.int64) - lo_d, width
+                    )
+            merged_span = merge_discrete_span(old.discrete_span, int_span(data))
+            if merged_span is not None:
+                hh_stats_d, hh_items_d, _, _ = _heavy_hitters_exact(counts_d)
+                hh_stats = np.concatenate([old.hh_stats, hh_stats_d], axis=0)
+                hh_items = list(old.hh_items) + [
+                    {k + lo_d: v for k, v in d.items()} for d in hh_items_d
+                ]
+            else:
+                # the append disqualified the column (span blown or a
+                # non-integral value arrived): a cold rebuild would report
+                # no heavy hitters for ANY partition, so the old rows are
+                # zeroed too — this is the one case where an append
+                # touches existing sketch rows
+                hh_stats = np.zeros((n, 3), np.float64)
+                hh_items = [dict() for _ in range(n)]
+            cols[spec.name] = ColumnSketch(
+                spec.name, NUMERIC,
+                np.concatenate([old.measures, measures_d], axis=0),
+                np.concatenate([old.hist_edges, edges_d], axis=0),
+                None, ndv, dv_freq, hh_stats, hh_items, None, None,
+                discrete_span=merged_span,
+            )
+        else:
+            if backend == "device":
+                counts_d = stats[spec.name]["counts"]
+            else:
+                counts_d = _partition_bincount(data, spec.cardinality)
+            counts = np.concatenate([old.cat_counts, counts_d], axis=0)
+            # full-P recompute from the merged exact counts: O(P·card),
+            # no row reads, and bitwise what the cold pass computes
+            hh_stats, hh_items, freq, is_hh = _heavy_hitters_exact(counts)
+            bitmap = None
+            ghh = None
+            if spec.groupable:
+                combined = (freq * is_hh).sum(axis=0)
+                k = min(BITMAP_K, spec.cardinality)
+                ghh = np.argsort(-combined, kind="stable")[:k].astype(np.int64)
+                bitmap = is_hh[:, ghh].astype(np.float64)
+            cols[spec.name] = ColumnSketch(
+                spec.name, CATEGORICAL, np.zeros((n, 9)), None, counts,
+                ndv, dv_freq, hh_stats, hh_items, ghh, bitmap,
+            )
+    return TableSketches(sk.table_name, n, table.rows_per_partition, cols)
+
+
+class SketchStore:
+    """Version-tracked sketch holder: the streaming plane's sketch cache.
+
+    Wraps one table's `TableSketches` and keeps them current across
+    in-place appends: `sketches()` checks `Table.version` and, when the
+    table grew through pure partition appends (`Table.append_range`),
+    updates incrementally via `update_sketches` — O(new partitions) — and
+    only falls back to a full `build_sketches` when the version chain
+    contains a non-append mutation.  ``incremental_updates`` /
+    ``full_rebuilds`` count which path each sync took (`bench_streaming`
+    reads them).
+    """
+
+    def __init__(self, table: Table, backend: str | None = None,
+                 use_ref: bool | None = None, plane="auto"):
+        self.table = table
+        self.backend = backend
+        self.use_ref = use_ref
+        self.plane = plane
+        self.incremental_updates = 0
+        self.full_rebuilds = 0
+        self._sk = build_sketches(
+            table, backend=backend, use_ref=use_ref, plane=plane
+        )
+        self._version = table.version
+
+    def sketches(self) -> TableSketches:
+        """The current table's sketches, incrementally maintained."""
+        if self.table.version != self._version:
+            rng = self.table.append_range(self._version)
+            if rng is None:
+                self.full_rebuilds += 1
+                self._sk = build_sketches(
+                    self.table, backend=self.backend, use_ref=self.use_ref,
+                    plane=self.plane,
+                )
+            else:
+                self.incremental_updates += 1
+                self._sk = update_sketches(
+                    self._sk, self.table, rng[0], backend=self.backend,
+                    use_ref=self.use_ref, plane=self.plane,
+                )
+            self._version = self.table.version
+        return self._sk
 
 
 # --------------------------------------------------------------------------

@@ -7,6 +7,12 @@ maintains statistics").  Columns are either numeric (float32) or categorical
 (num_partitions, rows_per_partition) array so that per-partition operations
 (sketch construction, per-partition query answers) are a single vectorized
 pass — the layout a TPU ingest pipeline would use.
+
+Growth happens at partition granularity (the paper's bulk-append ingest
+model): `append_partitions` / `concat_tables(into=)` append whole
+partitions in place, bump the data ``version``, and record the append in
+a log that downstream caches use to update incrementally instead of
+rebuilding — see docs/architecture.md ("streaming ingest plane").
 """
 from __future__ import annotations
 
@@ -39,15 +45,32 @@ class Table:
     """A partitioned columnar table.
 
     columns[name] has shape (num_partitions, rows_per_partition).
+
+    **Data versioning.**  ``version`` is bumped by every in-place mutation
+    API (`append_partitions`, `concat_tables(into=)`) so caches keyed to
+    this object (`EvalCache` device stacks, `AnswerStore` answers,
+    `SketchStore` sketches) can detect that their snapshots went stale.
+    Pure partition appends additionally record the pre-append partition
+    count in an append log; `append_range` lets a cache holding a snapshot
+    at an older version decide between an *incremental* update (every
+    intervening version was an append — only the new partitions changed)
+    and a full rebuild.
     """
 
     schema: tuple[ColumnSpec, ...]
     columns: dict[str, np.ndarray]
     name: str = "table"
-    # data version: bumped by in-place bulk appends (`concat_tables(into=)`)
-    # so caches keyed to this object (EvalCache device stacks, AnswerStore
-    # answers) can detect that their snapshots went stale
+    # data version: bumped by in-place mutations (see class docstring)
     version: int = 0
+    # {version: num_partitions before the append that produced it} — only
+    # pure partition appends are recorded; any version missing from the
+    # log forces consumers down the full-rebuild path.  Bounded: only the
+    # most recent MAX_APPEND_LOG appends are kept (a cache more than that
+    # many appends behind rebuilds — correct, just not incremental), so a
+    # long-running streaming server's log cannot grow without bound.
+    append_log: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    MAX_APPEND_LOG = 1024
 
     def __post_init__(self):
         shapes = {c.shape for c in self.columns.values()}
@@ -97,6 +120,57 @@ class Table:
     def groupable_columns(self) -> tuple[str, ...]:
         return tuple(s.name for s in self.schema if s.groupable)
 
+    # ---- streaming-ingest support --------------------------------------
+    def append_range(self, since_version: int) -> tuple[int, int] | None:
+        """(old_p, new_p) if every version step since ``since_version`` was
+        a pure partition append, else None (the caller must fully rebuild).
+
+        ``old_p`` is the partition count the snapshot at ``since_version``
+        saw; partitions ``[old_p, new_p)`` are the ones appended since.
+        """
+        if since_version == self.version:
+            p = self.num_partitions
+            return (p, p)
+        if since_version > self.version:
+            return None  # snapshot from the future: not an append chain
+        # the first missing version (non-append bump, or pruned past
+        # MAX_APPEND_LOG) exits immediately, so this walk is bounded by
+        # the log size, not the version gap
+        for v in range(since_version + 1, self.version + 1):
+            if v not in self.append_log:
+                return None
+        return (self.append_log[since_version + 1], self.num_partitions)
+
+    def fingerprint(self, parts: int | None = None) -> tuple:
+        """Cheap content fingerprint: shape + dtype + the four corner
+        values (first/last partition boundaries) per column.
+
+        O(1) per column — this is a *guard against out-of-band mutation*
+        (someone writing into a column array without bumping ``version``),
+        not a cryptographic digest: it catches appends, truncations, and
+        edits at the partition boundaries, which is where every supported
+        mutation API operates.  The encoding is raw corner *bytes* — a
+        couple of µs per call, and NaN-stable (NaN corners compare equal
+        to themselves, unlike float comparison).  `EvalCache` checks it
+        periodically and at batch boundaries, and raises rather than
+        silently serving answers for data that moved.
+
+        ``parts`` fingerprints only the first ``parts`` partitions: how a
+        cache syncing across an append chain verifies that the *old*
+        region its snapshot covers is still the data it fingerprinted.
+        """
+        fp = []
+        for name in sorted(self.columns):
+            c = self.columns[name]
+            if parts is not None:
+                c = c[:parts]
+            if c.size == 0:
+                fp.append((name, c.shape, c.dtype.str))
+                continue
+            corners = c[:: max(c.shape[0] - 1, 1), :: max(c.shape[1] - 1, 1)]
+            fp.append((name, c.shape, c.dtype.str, corners.tobytes()))
+        return tuple(fp)
+
     # ---- layout manipulation -------------------------------------------
     def flat(self, name: str) -> np.ndarray:
         return self.columns[name].reshape(-1)
@@ -128,25 +202,78 @@ def from_flat(schema, columns: Mapping[str, np.ndarray], name: str) -> Table:
     return Table(tuple(schema), {k: np.asarray(v).reshape(1, -1) for k, v in columns.items()}, name=name)
 
 
+def append_partitions(
+    into: Table, new: Table | Mapping[str, np.ndarray]
+) -> Table:
+    """Streaming ingest entry point: append whole partitions in place.
+
+    ``new`` is either a delta table or a mapping of column name →
+    ``(delta_partitions, rows_per_partition)`` arrays with the same schema
+    and row count as ``into``.  The append bumps ``into.version`` and
+    records the pre-append partition count in the append log, which is
+    what lets every downstream cache update *incrementally* instead of
+    rebuilding:
+
+      * `core.sketches.update_sketches` / `SketchStore` compute sketch
+        rows for only the appended partitions (O(delta), not O(P)) and
+        merge the global heavy-hitter state;
+      * `queries.engine.EvalCache` writes the new partition columns into
+        its device stack's reserved slack (one O(delta) transfer; re-pad
+        and re-shard only when the shape bucket overflows);
+      * `queries.engine.AnswerStore` keeps cached per-partition answers
+        for the untouched partitions and evaluates only the delta.
+
+    Every incremental path is bit-identical to a cold rebuild on the grown
+    table (tested in ``tests/test_streaming_ingest.py``, incl. 2- and
+    8-device partition meshes).  An empty delta (0 partitions) is a no-op
+    append: the version still advances, caches observe it and carry over.
+    """
+    cols = new.columns if isinstance(new, Table) else dict(new)
+    if sorted(cols) != sorted(into.columns):
+        raise ValueError("append schema mismatch")
+    old_p, r = into.num_partitions, into.rows_per_partition
+    out: dict[str, np.ndarray] = {}
+    for spec in into.schema:
+        c = np.asarray(cols[spec.name])
+        if c.ndim != 2 or c.shape[1] != r:
+            raise ValueError(
+                f"append column {spec.name}: expected (delta, {r}), got {c.shape}"
+            )
+        dtype = np.float32 if spec.kind == NUMERIC else np.int32
+        out[spec.name] = np.concatenate(
+            [into.columns[spec.name], c.astype(dtype)], axis=0
+        )
+    into.columns = out
+    into.version += 1
+    into.append_log[into.version] = old_p
+    while len(into.append_log) > Table.MAX_APPEND_LOG:
+        del into.append_log[min(into.append_log)]
+    return into
+
+
 def concat_tables(tables: Sequence[Table], into: Table | None = None) -> Table:
     """Bulk-append (the paper's ingest model): partitions are appended.
 
-    With ``into=`` the append happens in place: the target table's columns
-    grow and its ``version`` bumps, which invalidates everything cached
-    against the old contents — `EvalCache` drops its device column stack
-    and derived casts, `AnswerStore` drops its held answers — instead of
-    serving stale results for the smaller table.  The caches rebuild from
-    scratch on next use; *incremental* sketch/stack updates (streaming
-    ingest) stay a ROADMAP item.
+    Without ``into=`` this is pure: a new `Table` holding the concatenated
+    partitions.  With ``into=`` it is an in-place streaming append through
+    `append_partitions` — all deltas are combined into ONE append (one
+    copy, one version bump, one append-log entry), so caches holding
+    snapshots (`EvalCache` device stacks, `AnswerStore` answers,
+    `SketchStore` sketches) update incrementally from the delta
+    partitions instead of rebuilding, and never serve results for the
+    smaller table.
     """
-    base = tables[0] if into is None else into
-    parts = list(tables) if into is None else [into, *tables]
+    if into is not None:
+        if not tables:
+            return into
+        delta = {
+            k: np.concatenate([t.columns[k] for t in tables], axis=0)
+            for k in into.columns
+        } if len(tables) > 1 else tables[0].columns
+        return append_partitions(into, delta)
+    base = tables[0]
     cols = {
-        k: np.concatenate([t.columns[k] for t in parts], axis=0)
+        k: np.concatenate([t.columns[k] for t in tables], axis=0)
         for k in base.columns
     }
-    if into is None:
-        return Table(base.schema, cols, name=base.name)
-    into.columns = cols
-    into.version += 1
-    return into
+    return Table(base.schema, cols, name=base.name)

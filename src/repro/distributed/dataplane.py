@@ -43,11 +43,25 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.distributed.axes import PARTITION_AXIS
+from repro.kernels.telemetry import TraceRegistry
 
 
 @dataclasses.dataclass(frozen=True)
 class PartitionPlane:
-    """A 1-axis device mesh over the partition dimension."""
+    """A 1-axis device mesh over the partition dimension.
+
+    The handle every ``plane=`` argument accepts (`build_statistics`,
+    `build_sketches`, `EvalCache`, `AnswerStore`): partition-axis tensors
+    are zero-padded to a mesh multiple and sharded along the shared
+    ``"part"`` axis (`shard_partitions`), launches run under `shard_map`
+    via `sharded_call`, and per-partition results come back through
+    `gather` with the pad sliced off.  Sharded results are bit-identical
+    to the single-device path on every mesh size (each partition's
+    reductions stay on one device with unchanged shapes and fold order),
+    and the compile census is mesh-size-independent.  Obtain one via
+    `resolve_plane` ("auto" = the ``REPRO_MESH`` policy, an int = that
+    many devices, None = the single-device path).
+    """
 
     mesh: jax.sharding.Mesh
 
@@ -65,11 +79,17 @@ class PartitionPlane:
         """Partitions per device — the P every sharded launch sees."""
         return self.padded(num_partitions) // self.num_devices
 
-    def shard_partitions(self, arr, axis: int = 0) -> jax.Array:
+    def shard_partitions(self, arr, axis: int = 0, target: int | None = None) -> jax.Array:
         """Zero-pad `axis` (the partition axis) to a mesh multiple and
-        place the array sharded along it; everything else is replicated."""
+        place the array sharded along it; everything else is replicated.
+
+        ``target`` asks for extra zero slack beyond the mesh multiple (it
+        is itself rounded up to one): the streaming ingest plane pads the
+        device column stack to its shape *bucket* so in-place appends can
+        write new partitions into the slack without changing the sharded
+        shape (`queries.engine.EvalCache.device_stack`)."""
         arr = np.asarray(arr)
-        pad = self.padded(arr.shape[axis]) - arr.shape[axis]
+        pad = self.padded(max(arr.shape[axis], target or 0)) - arr.shape[axis]
         if pad:
             widths = [(0, 0)] * arr.ndim
             widths[axis] = (0, pad)
@@ -147,3 +167,58 @@ def partition_spec(rank: int, axis: int) -> PartitionSpec:
 
 
 REPLICATED = PartitionSpec()
+
+
+# --------------------------------------------------------------------------
+# streaming append: write new partitions into a buffer's reserved slack
+# --------------------------------------------------------------------------
+TRACES = TraceRegistry("dataplane")
+
+
+@functools.lru_cache(maxsize=None)
+def _write_jit(mesh, rank, axis):
+    def body(buf, delta, start):
+        TRACES.note("write_partitions", axis, *buf.shape, delta.shape[axis])
+        idx = tuple(start if i == axis else 0 for i in range(rank))
+        return jax.lax.dynamic_update_slice(buf, delta, idx)
+
+    if mesh is None:
+        return jax.jit(body)
+    spec = [None] * rank
+    spec[axis] = PARTITION_AXIS
+    return jax.jit(body, out_shardings=NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+def write_partitions(buf: jax.Array, delta, start: int, axis: int = 0,
+                     plane: PartitionPlane | None = None) -> jax.Array:
+    """Write ``delta`` into ``buf`` at offset ``start`` along the partition
+    axis — the O(delta) device-side append behind the streaming plane.
+
+    ``buf`` keeps its (possibly sharded) shape: the caller must have
+    reserved slack (`shard_partitions(target=)` / a padded shape bucket)
+    so the delta fits.  Only the delta ships host→device; under a mesh the
+    result stays sharded along the partition axis.
+
+    The delta's partition count is zero-padded up to a power-of-two
+    bucket when the padded write still fits the remaining slack (the
+    slack being overwritten is zero anyway, and `dynamic_update_slice`
+    would *clamp* an out-of-range start — shifting the write onto real
+    partitions — so an oversized pad falls back to the exact shape).
+    Varying-size appends therefore compile O(log slack) writes, not one
+    per distinct size — `TRACES` counts them.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.clustering import bucket_size
+
+    delta = np.asarray(delta)
+    d = delta.shape[axis]
+    if start + d > buf.shape[axis]:
+        raise ValueError("append exceeds the buffer's reserved slack")
+    db = bucket_size(d, minimum=1)
+    if d and start + db <= buf.shape[axis] and db != d:
+        widths = [(0, 0)] * delta.ndim
+        widths[axis] = (0, db - d)
+        delta = np.pad(delta, widths)
+    f = _write_jit(None if plane is None else plane.mesh, buf.ndim, axis)
+    return f(buf, jnp.asarray(delta), jnp.int32(start))

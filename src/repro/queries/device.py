@@ -186,16 +186,21 @@ def _signature(canon: CanonicalPredicate, radix: int, n_raw: int) -> Signature:
     return Signature(cb, gb, _radix_bucket(radix), vb)
 
 
+def _stack_local(table: Table, plane=None) -> int:
+    """Partition count of the stack each launch actually sees: the padded
+    shape bucket (`engine.stack_partitions` — the streaming plane's
+    append slack), divided over the mesh when sharded."""
+    pb = engine.stack_partitions(table.num_partitions, plane)
+    return pb // plane.num_devices if plane is not None else pb
+
+
 def _max_stack(table: Table, sig: Signature, plane=None) -> int:
     """Largest power-of-two query stack that fits the element budget
     (clause gather and segment-sum output are the two bulk tensors).
     Under a partition mesh the budget is per *device*, so the local
     partition count is what multiplies in — deeper stacks fit as the
     mesh grows."""
-    n_local = (
-        plane.local(table.num_partitions) if plane is not None
-        else table.num_partitions
-    )
+    n_local = _stack_local(table, plane)
     per_query = n_local * (
         table.rows_per_partition * max(sig.num_clauses, sig.n_raw, 1)
         + sig.radix * sig.n_raw
@@ -510,13 +515,10 @@ def workload_census(
     """
     cache = cache or engine.EvalCache(table)
     grouped, _ = _plan_workload(table, queries, cache)
-    # census keys use the shapes each launch *sees*: local-shard partition
-    # counts under a mesh, the full table otherwise — so the key-set
-    # cardinality (the compile bound) is independent of mesh size
-    n_local = (
-        cache.plane.local(table.num_partitions) if cache.plane is not None
-        else table.num_partitions
-    )
+    # census keys use the shapes each launch *sees*: the bucket-padded
+    # stack (local shard under a mesh) — independent of mesh size, and
+    # flat across in-bucket streaming appends
+    n_local = _stack_local(table, cache.plane)
     keys: set[tuple] = set()
     for sig, entries in grouped.items():
         for chunk in _chunks(entries, _max_stack(table, sig, cache.plane)):

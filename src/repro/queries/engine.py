@@ -26,7 +26,7 @@ import jax
 import numpy as np
 
 from repro.backends import resolve_backend
-from repro.data.table import CATEGORICAL, Table
+from repro.data.table import CATEGORICAL, NUMERIC, Table
 from repro.queries.ir import Aggregate, Predicate, Query
 
 MAX_GROUPS = 4096  # generator guarantees radix product <= this
@@ -203,6 +203,21 @@ def query_key(query: Query) -> str:
 # --------------------------------------------------------------------------
 # workload-invariant evaluation cache
 # --------------------------------------------------------------------------
+def stack_partitions(num_partitions: int, plane=None) -> int:
+    """Physical partition count of the device column stack: P padded to a
+    power-of-two shape bucket (and, under a mesh, to a mesh multiple).
+
+    The slack between P and the bucket is the streaming plane's headroom:
+    appends write new partition columns into it without changing the
+    stack's shape, so every query-eval executable compiled before the
+    append still fits after it — the compile census stays flat until the
+    bucket overflows and the stack is re-padded (and re-sharded)."""
+    from repro.core.clustering import bucket_size
+
+    pb = bucket_size(num_partitions, minimum=1)
+    return plane.padded(pb) if plane is not None else pb
+
+
 class EvalCache:
     """Per-table cache of the intermediates shared across a workload.
 
@@ -216,10 +231,19 @@ class EvalCache:
     backend ("auto" = the ``REPRO_MESH`` policy): under a mesh the device
     column stack is held *sharded* along P, so every consumer — the query
     driver, `AnswerStore`, the serving `BatchPicker` — runs
-    partition-parallel without changing.  Every accessor checks the
-    table's data version first: an in-place bulk append
-    (`concat_tables(into=)`) drops all cached intermediates instead of
-    serving snapshots of the smaller table.
+    partition-parallel without changing.
+
+    **Invalidation semantics.**  Every accessor checks the table's data
+    version first.  A version bump whose chain is pure partition appends
+    (`Table.append_range`) keeps the device column stack and *grows* it in
+    place: the new partition columns are written into the stack's
+    reserved bucket slack (one O(delta) transfer, `stack_partitions`),
+    re-padding + re-sharding only when the bucket overflows; the cheap
+    host-side caches (codes, casts, projections) are dropped and rebuilt
+    lazily.  Any other version bump drops everything.  A table whose
+    *contents* changed without a version bump (out-of-band mutation of a
+    column array) is detected by a boundary fingerprint and raises — a
+    clear error instead of silently stale answers.
     """
 
     def __init__(self, table: Table, plane="auto"):
@@ -228,30 +252,94 @@ class EvalCache:
         self.table = table
         self.plane = dataplane.resolve_plane(plane)
         self._version = table.version
+        self._fp = table.fingerprint()
+        self._fp_tick = 0
         self._codes: dict[tuple[str, ...], tuple[np.ndarray, int]] = {}
         self._f64: dict[str, np.ndarray] = {}
         self._f32: dict[str, np.ndarray] = {}
         self._proj: dict[tuple, np.ndarray] = {}
         self._posinf: dict[str, bool] = {}
         self._nonfinite: dict[str, bool] = {}
-        self._stack = None  # device-resident (n_cols+1, P, R) column stack
+        self._stack = None  # device-resident (n_cols+1, P_bucket, R) stack
+        self._stack_p = 0  # logical partitions currently written into it
         self.col_index = {s.name: i for i, s in enumerate(table.schema)}
         self.ones_index = len(table.schema)
         self.codes_builds = 0
         self.cast_builds = 0
+        self.stack_appends = 0  # in-place slack writes (streaming appends)
+        self.stack_rebuilds = 0  # full stack (re)builds incl. overflows
+
+    # the fingerprint guard costs ~1-2 µs/column, so hot accessors only
+    # re-verify every Nth sync; public batch entries (AnswerStore._sync,
+    # per_partition_answers_batch, device_stack) force a check, bounding
+    # how long an out-of-band mutation can go unnoticed to one batch
+    FP_CHECK_EVERY = 64
+
+    def check_fingerprint(self) -> None:
+        """Raise if the table's contents moved without a version bump
+        (out-of-band mutation of a column array).  Safe to call anytime:
+        a *declared* change (version bumped) is reconciled by `_sync`
+        instead."""
+        self._fp_tick = 0
+        if self.table.version != self._version:
+            return
+        if self.table.fingerprint() != self._fp:
+            raise RuntimeError(
+                f"table {self.table.name!r} changed without a version "
+                "bump (out-of-band mutation of a column array?); use "
+                "append_partitions/concat_tables(into=) so caches can "
+                "see the change instead of serving stale answers"
+            )
 
     def _sync(self) -> None:
-        """Drop every cached intermediate if the table data moved on."""
+        """Reconcile with the table's data version: grow in place after a
+        pure append chain, drop everything otherwise, raise on out-of-band
+        mutation (data changed, version did not — checked every
+        ``FP_CHECK_EVERY`` accessor calls and at every public batch
+        entry via `check_fingerprint`)."""
         if self.table.version == self._version:
+            self._fp_tick += 1
+            if self._fp_tick >= self.FP_CHECK_EVERY:
+                self.check_fingerprint()
             return
+        rng = self.table.append_range(self._version)
+        if rng is not None and self.table.fingerprint(rng[0]) != self._fp:
+            # the append chain is genuine, but the PRE-append region no
+            # longer matches our snapshot: an out-of-band mutation hid
+            # behind the append's version bump — carrying answers or the
+            # grown stack would serve stale data for the mutated rows
+            raise RuntimeError(
+                f"table {self.table.name!r}: pre-append partitions changed "
+                "outside the append API (out-of-band mutation before "
+                "append_partitions?); caches cannot update incrementally "
+                "from this snapshot"
+            )
         self._codes.clear()
         self._f64.clear()
         self._f32.clear()
         self._proj.clear()
-        self._posinf.clear()
-        self._nonfinite.clear()
-        self._stack = None
+        if rng is None:
+            self._posinf.clear()
+            self._nonfinite.clear()
+            self._stack = None
+            self._stack_p = 0
+        else:
+            start = rng[0]
+            # the non-finiteness flags route queries between backends:
+            # extend them with a delta-only scan instead of a full re-scan
+            for col in list(self._posinf):
+                self._posinf[col] = self._posinf[col] or bool(
+                    np.isposinf(self.table.columns[col][start:]).any()
+                )
+            for col in list(self._nonfinite):
+                self._nonfinite[col] = self._nonfinite[col] or not bool(
+                    np.isfinite(self.table.columns[col][start:]).all()
+                )
+            if self._stack is not None:
+                self._grow_stack()
         self._version = self.table.version
+        self._fp = self.table.fingerprint()
+        self._fp_tick = 0
 
     def group_codes(self, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
         self._sync()
@@ -301,31 +389,75 @@ class EvalCache:
             )
         return hit
 
+    def _host_stack(self, lo: int, hi: int) -> np.ndarray:
+        """(n_cols+1, hi-lo, R) host column stack incl. the ones column."""
+        t = self.table
+        rows = [
+            np.ascontiguousarray(t.columns[s.name][lo:hi], dtype=np.float32)
+            for s in t.schema
+        ]
+        rows.append(np.ones((hi - lo, t.rows_per_partition), np.float32))
+        return np.stack(rows)
+
+    def _grow_stack(self) -> None:
+        """Append partitions [stack_p, P) into the device stack's slack —
+        the O(delta) transfer; overflowing the shape bucket drops the
+        stack for a full re-pad (+ re-shard) on next access."""
+        from repro.distributed import dataplane
+
+        n = self.table.num_partitions
+        start = self._stack_p
+        if n == start:
+            return  # empty append: nothing to write
+        if n > self._stack.shape[1]:
+            # bucket overflow: drop, and let the next device_stack() call
+            # re-pad (+ re-shard) at the new bucket — counted there
+            self._stack = None
+            self._stack_p = 0
+            return
+        self._stack = dataplane.write_partitions(
+            self._stack, self._host_stack(start, n), start, axis=1,
+            plane=self.plane,
+        )
+        self._stack_p = n
+        self.stack_appends += 1
+
     def device_stack(self) -> jax.Array:
-        """(n_cols+1, P, R) float32 column stack, resident on device.
+        """(n_cols+1, P_bucket, R) float32 column stack, resident on device.
 
         The trailing pseudo-column is all-ones: the count component and
         always-true padding clauses read it, so the device driver's only
         per-query inputs are small descriptors (indices / bounds /
         coefficients) — the table itself ships once per EvalCache.
 
-        Under a partition mesh the stack is zero-padded along P to a mesh
-        multiple and sharded on the partition axis, so each device holds
-        only its local partitions and the driver's `shard_map` launches
-        read them without any resharding.
+        The partition axis is zero-padded to `stack_partitions` (the
+        power-of-two shape bucket; under a mesh also a mesh multiple) and,
+        under a partition mesh, sharded on the partition axis so each
+        device holds only its local partitions.  The zero slack beyond the
+        table's real P — including the zeroed ones-column, so padded
+        partitions can never contribute a count — is the streaming
+        plane's append headroom: `_grow_stack` writes new partitions into
+        it in place, and the driver slices answers back to the real P.
         """
         self._sync()
+        self.check_fingerprint()  # the stack is the costliest thing to poison
         if self._stack is None:
             import jax.numpy as jnp
 
             t = self.table
-            rows = [self.f32(s.name) for s in t.schema]
-            rows.append(np.ones((t.num_partitions, t.rows_per_partition), np.float32))
-            stack = np.stack(rows)
+            target = stack_partitions(t.num_partitions, self.plane)
+            stack = self._host_stack(0, t.num_partitions)
+            self.stack_rebuilds += 1
             if self.plane is not None:
-                self._stack = self.plane.shard_partitions(stack, axis=1)
+                self._stack = self.plane.shard_partitions(
+                    stack, axis=1, target=target
+                )
             else:
+                pad = target - t.num_partitions
+                if pad:
+                    stack = np.pad(stack, ((0, 0), (0, pad), (0, 0)))
                 self._stack = jnp.asarray(stack)
+            self._stack_p = t.num_partitions
         return self._stack
 
     # distinct aggregate term tuples are unbounded across a serving
@@ -360,39 +492,147 @@ class AnswerStore:
     evaluated together through `per_partition_answers_batch`, so a cold
     serving batch costs one stacked device pass, not Q host rescans.
 
-    Held answers are snapshots of the table's current data version: an
-    in-place bulk append (`concat_tables(into=)`) drops them all on the
-    next access — answers for the grown table must count its new
-    partitions, and every cached entry's (N, G, n_raw) raw tensor is
-    wrong the moment N changes.
+    **Append semantics (streaming plane).**  Per-partition answers are
+    row-local: appending partitions cannot change any existing
+    partition's contribution.  So when the table grows through pure
+    partition appends (`Table.append_range`), held answers *survive* — on
+    next access only the appended partitions are evaluated (one stacked
+    pass over a delta view of the table) and merged into each entry's
+    (N, G, n_raw) raw tensor, bit-identical to a cold re-evaluation of
+    the grown table.  The store still drops everything when the version
+    chain contains a non-append mutation, or when an append introduces
+    non-finite values on the device backend (those flip per-query
+    host-fallback decisions, which would mix fold orders).
     """
 
-    def __init__(self, table: Table, capacity: int = 256, backend: str | None = None):
+    def __init__(self, table: Table, capacity: int = 256,
+                 backend: str | None = None, plane="auto"):
         self.table = table
         self.capacity = int(capacity)
         self.backend = backend
         self._cache: dict[str, PartitionAnswers] = {}
-        self._eval_cache = EvalCache(table)
+        self._eval_cache = EvalCache(table, plane=plane)
         self._version = table.version
         self.hits = 0
         self.misses = 0
+        self.carried = 0  # entries kept across appends (selective inval.)
+        self.delta_evals = 0  # delta-partition evaluations after appends
+        # delta view + EvalCache per pre-append P, shared across entries
+        # (and across get() calls) so one append ships one delta stack
+        self._delta_caches: dict[int, tuple[Table, EvalCache]] = {}
 
     @property
     def plane(self):
         """The partition mesh the device backend evaluates on (or None)."""
         return self._eval_cache.plane
 
+    def _delta_backend_safe(self, start: int) -> bool:
+        """Merging old answers with delta answers is only sound if the
+        append cannot flip a query's device/host routing: on the device
+        backend, non-finite values arriving in the delta change
+        `EvalCache.has_posinf`/`has_nonfinite` fallback decisions, and the
+        two paths differ in f32 fold order."""
+        from repro.backends import resolve_backend
+
+        if resolve_backend(self.backend) != "device":
+            return True
+        for spec in self.table.schema:
+            if spec.kind != NUMERIC:
+                continue
+            delta = self.table.columns[spec.name][start:]
+            if delta.size and not np.isfinite(delta).all():
+                return False
+        return True
+
     def _sync(self) -> None:
-        if self.table.version != self._version:
+        # delegate first: raises on out-of-band mutation (fingerprint,
+        # forced at this batch boundary) and grows/drops the device stack
+        # — even on an all-hits batch that never touches the eval cache
+        self._eval_cache._sync()
+        self._eval_cache.check_fingerprint()
+        if self.table.version == self._version:
+            return
+        rng = self.table.append_range(self._version)
+        if rng is None or not self._delta_backend_safe(rng[0]):
             self._cache.clear()
-            self._version = self.table.version
+        self._version = self.table.version
+        self._delta_caches.clear()  # delta views are per-version snapshots
+        # surviving entries are merged lazily on access: their raw tensors
+        # still have the pre-append partition count, which records exactly
+        # where each entry's delta evaluation must start
+
+    def _delta_view(self, start: int) -> tuple[Table, EvalCache]:
+        """The appended partitions [start, P) as a throwaway table (column
+        slices are views — no copies) plus a memoized EvalCache for it.
+
+        The cache's non-finiteness flags are seeded from the *full*
+        table's: device/host routing must match what a cold evaluation of
+        the grown table would decide, or a column whose old partitions
+        hold non-finite values would send the delta down the device path
+        the cold rebuild avoids (f32 fold order ⇒ not bit-identical)."""
+        hit = self._delta_caches.get(start)
+        if hit is not None:
+            return hit
+        from repro.backends import resolve_backend
+
+        t = self.table
+        cols = {k: v[start:] for k, v in t.columns.items()}
+        view = Table(t.schema, cols, name=f"{t.name}/delta@{start}")
+        cache = EvalCache(view, plane=self._eval_cache.plane)
+        if resolve_backend(self.backend) == "device":
+            # only the device driver consults these flags (host evaluation
+            # is routing-free), so the host backend skips the full-column
+            # scans the seeding would otherwise force
+            for spec in t.schema:
+                if spec.kind == NUMERIC:
+                    cache._posinf[spec.name] = self._eval_cache.has_posinf(spec.name)
+                    cache._nonfinite[spec.name] = self._eval_cache.has_nonfinite(spec.name)
+        self._delta_caches[start] = (view, cache)
+        return view, cache
+
+    def _merge_delta(self, old: PartitionAnswers, delta: PartitionAnswers) -> PartitionAnswers:
+        """Merge an entry's pre-append answers with the delta partitions'
+        answers: union the occupied groups, stack the raw tensors."""
+        keys = np.union1d(old.group_keys, delta.group_keys)
+        n_old, n_delta = old.raw.shape[0], delta.raw.shape[0]
+        raw = np.zeros((n_old + n_delta, keys.shape[0], old.raw.shape[2]))
+        raw[:n_old, np.searchsorted(keys, old.group_keys)] = old.raw
+        raw[n_old:, np.searchsorted(keys, delta.group_keys)] = delta.raw
+        return PartitionAnswers(old.query, keys, raw, old.plans)
+
+    def _refresh(self, entries: list[tuple[str, PartitionAnswers]]) -> dict[str, PartitionAnswers]:
+        """Bring append-stale entries up to the current partition count:
+        one stacked delta evaluation per distinct pre-append P."""
+        n = self.table.num_partitions
+        out: dict[str, PartitionAnswers] = {}
+        by_start: dict[int, list[tuple[str, PartitionAnswers]]] = {}
+        for key, ans in entries:
+            by_start.setdefault(ans.raw.shape[0], []).append((key, ans))
+        for start, group in by_start.items():
+            view, cache = self._delta_view(start)
+            fresh = per_partition_answers_batch(
+                view, [ans.query for _, ans in group],
+                backend=self.backend, cache=cache,
+            )
+            self.delta_evals += len(group)
+            self.carried += len(group)
+            for (key, ans), d in zip(group, fresh):
+                merged = self._merge_delta(ans, d)
+                assert merged.raw.shape[0] == n
+                out[key] = merged
+        return out
 
     def get(self, query: Query) -> PartitionAnswers:
         self._sync()
         key = query_key(query)
-        hit = self._cache.pop(key, None)
+        # non-destructive read: if the delta refresh below raises, the
+        # stale-but-mergeable entry must survive for the retry
+        hit = self._cache.get(key)
+        if hit is not None and hit.raw.shape[0] != self.table.num_partitions:
+            hit = self._refresh([(key, hit)])[key]  # append-stale: merge delta
         if hit is not None:
             self.hits += 1
+            self._cache.pop(key, None)
             self._cache[key] = hit  # re-insert = most recently used
             return hit
         self.misses += 1
@@ -403,8 +643,11 @@ class AnswerStore:
         return ans
 
     def get_batch(self, queries: list[Query]) -> list[PartitionAnswers]:
-        """Answers for a batch; all misses evaluated in one stacked pass."""
+        """Answers for a batch; all misses evaluated in one stacked pass
+        (and, after an append, all append-stale hits brought current in
+        one stacked delta pass)."""
         self._sync()
+        n = self.table.num_partitions
         keys = [query_key(q) for q in queries]
         # snapshot every pre-cached answer up front (non-destructively, so
         # an exception in the miss pass leaves the cache intact): the
@@ -420,6 +663,9 @@ class AnswerStore:
                 held[key] = hit
             else:
                 missing[key] = q
+        stale = [(k, a) for k, a in held.items() if a.raw.shape[0] != n]
+        if stale:
+            held.update(self._refresh(stale))
         fresh: dict[str, PartitionAnswers] = {}
         if missing:
             evaluated = per_partition_answers_batch(
@@ -432,8 +678,8 @@ class AnswerStore:
         out: list[PartitionAnswers] = []
         for key in keys:
             hit = self._cache.pop(key, None)
-            if hit is None and key in held:
-                hit = held[key]
+            if key in held:
+                hit = held[key]  # the refreshed object, not the stale one
             if hit is not None:
                 self.hits += 1
             else:
@@ -504,10 +750,19 @@ def per_partition_answers_batch(
     The device backend groups queries by shape-bucket signature and stacks
     each group along the partition axis so a training workload or serving
     batch is a handful of kernel launches; the host backend shares the
-    `EvalCache` intermediates across the loop.
+    `EvalCache` intermediates across the loop.  Backend/mesh resolution:
+    ``backend`` as in `repro.backends` (explicit → ``REPRO_EVAL_BACKEND``
+    → platform default), the mesh via the ``cache``'s plane.  Answers are
+    per-partition row-local, so results are bit-identical across mesh
+    sizes and across streaming appends (a grown table's first ``P_old``
+    answer rows equal the pre-append ones — what lets `AnswerStore`
+    invalidate selectively).  Pass a long-lived ``cache`` to amortize the
+    device column stack and host intermediates across calls; it
+    self-synchronizes against table appends (see `EvalCache`).
     """
     backend = resolve_backend(backend)
     cache = cache or EvalCache(table)
+    cache.check_fingerprint()  # batch boundary: force the mutation guard
     if backend == "device":
         from repro.queries import device
 

@@ -16,7 +16,15 @@ fixes the amortizable parts:
     regardless of how many distinct candidate-set sizes traffic produces;
   * **answer reuse** — exact per-partition answers are memoized in a
     bounded LRU (`queries.engine.AnswerStore`) keyed by canonical query
-    text, so repeated queries never rescan the table.
+    text, so repeated queries never rescan the table;
+  * **append survival (streaming plane)** — when the served table grows
+    through in-place partition appends (`append_partitions` /
+    `concat_tables(into=)`), the answer LRU keeps every held entry and
+    evaluates only the appended partitions on next access, and the
+    underlying `EvalCache` writes the new partitions into its device
+    stack's reserved slack — serving never pays an O(P) rebuild for an
+    O(delta) append (`serve_stats` reports ``answers_carried`` /
+    ``stack_appends``).
 
 `serve_stats` snapshots throughput (picks/sec) and compile counts; the
 `benchmarks/bench_serving.py` canary and the compile-bound test read it.
@@ -67,6 +75,14 @@ class BatchPicker:
     Thin, stateful, and cheap to construct: all heavy artifacts (sketches,
     funnel, cluster mask) live on the wrapped picker; this layer only adds
     the batched feature pass, the answer LRU, and telemetry.
+
+    Cache behavior under data growth: the answer LRU and its `EvalCache`
+    self-synchronize against the served table's version — in-place
+    partition appends keep cached answers for untouched partitions and
+    cost one O(delta) stack write + delta evaluation (see `AnswerStore`);
+    non-append mutations drop and rebuild.  The compile census stays flat
+    across in-bucket appends, so long-running servers do not re-trace as
+    their table grows.
     """
 
     def __init__(
@@ -151,6 +167,12 @@ class BatchPicker:
             "eval_compiles": eval_compiles,  # device query-eval driver traces
             # partition mesh the answer path evaluates on (1 = unsharded)
             "mesh_devices": plane.num_devices if plane is not None else 1,
+            # streaming-append telemetry: answers kept across appends and
+            # in-place device-stack slack writes vs full stack rebuilds
+            "answers_carried": self.answers.carried,
+            "answer_delta_evals": self.answers.delta_evals,
+            "stack_appends": self.answers._eval_cache.stack_appends,
+            "stack_rebuilds": self.answers._eval_cache.stack_rebuilds,
         }
 
 

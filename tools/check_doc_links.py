@@ -1,0 +1,107 @@
+"""Docs link check (CI lint lane): every cross-reference resolves.
+
+Scans README.md and docs/*.md for markdown links and verifies that
+
+  * relative file links point at files that exist in the repo;
+  * ``#anchor`` fragments (with or without a file part) match a heading
+    in the target file, using GitHub's slug rules (lowercase, spaces to
+    dashes, punctuation dropped).
+
+External (http/https) links are not fetched — CI must not depend on the
+network.  Exits non-zero listing every broken link.
+
+    python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)]+)\)")
+TITLE_RE = re.compile(r'^(\S+)\s+"[^"]*"$')  # [text](target "Title")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug of a markdown heading.
+
+    Underscores survive (GitHub keeps them in code spans, and headings
+    here never use ``_emphasis_``); backticks/asterisks and other
+    punctuation are dropped, spaces become dashes."""
+    text = re.sub(r"[`*]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        content = f.read()
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    for heading in HEADING_RE.findall(content):
+        slug = slugify(heading)
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def doc_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+        )
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_file(path: str) -> list[str]:
+    problems: list[str] = []
+    rel = os.path.relpath(path, ROOT)
+    with open(path, encoding="utf-8") as f:
+        content = f.read()
+    for target in LINK_RE.findall(content):
+        target = target.strip()
+        if " " in target or "\t" in target:
+            m = TITLE_RE.match(target)  # titled links: validate the target part
+            if m is None:
+                # whitespace without a recognizable "Title" suffix: never
+                # skip silently — an unvalidatable link is a broken link
+                problems.append(f"{rel}: unparseable link target -> {target}")
+                continue
+            target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            dest = os.path.normpath(os.path.join(os.path.dirname(path), file_part))
+            if not os.path.exists(dest):
+                problems.append(f"{rel}: broken file link -> {target}")
+                continue
+        else:
+            dest = path  # same-file anchor
+        if anchor:
+            if not dest.endswith(".md"):
+                continue  # anchors into non-markdown files: not checkable
+            if anchor not in heading_slugs(dest):
+                problems.append(f"{rel}: broken anchor -> {target}")
+    return problems
+
+
+def main() -> None:
+    files = doc_files()
+    problems = [p for f in files for p in check_file(f)]
+    if problems:
+        print("broken documentation links:")
+        for p in problems:
+            print("  " + p)
+        sys.exit(1)
+    print(f"docs link check: {len(files)} files OK")
+
+
+if __name__ == "__main__":
+    main()
