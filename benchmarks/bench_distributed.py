@@ -22,6 +22,7 @@ import os
 import jax
 
 from benchmarks.common import timed as _timed, timed_min as _timed_min, write_result
+from repro.backends import ExecOptions
 from repro.core import ingest
 from repro.data.datasets import make_dataset
 from repro.queries import device
@@ -45,16 +46,17 @@ def _mesh_sizes() -> list[int]:
 
 def _eval_pass(table, queries, plane):
     """(cold s, warm s, compiles, census) for one mesh configuration."""
-    cache = EvalCache(table, plane=plane)
+    options = ExecOptions(backend="device", mesh=plane)
+    cache = EvalCache(table, options=options)
     device.TRACES.reset()
     _, t_cold = _timed(
-        per_partition_answers_batch, table, queries, backend="device", cache=cache
+        per_partition_answers_batch, table, queries, cache=cache, options=options
     )
     compiles = device.TRACES.total()
     census = len(device.workload_census(table, queries, cache))
     assert compiles <= census, (compiles, census)  # the bounded-compile contract
     _, t_warm = _timed_min(
-        3, per_partition_answers_batch, table, queries, backend="device", cache=cache
+        3, per_partition_answers_batch, table, queries, cache=cache, options=options
     )
     return t_cold, t_warm, compiles, census
 
@@ -73,9 +75,11 @@ def run():
             "tpch", num_partitions=BASE_PARTS * d, rows_per_partition=ROWS
         )
         queries = WorkloadSpec(table, seed=77).sample_workload(N_QUERIES)
-        ingest.build_statistics(table, discrete_counts=True, plane=d)  # compile
+        ingest.build_statistics(table, discrete_counts=True,
+                                options=ExecOptions(mesh=d))  # compile
         _, t_sk = _timed_min(
-            3, ingest.build_statistics, table, discrete_counts=True, plane=d
+            3, ingest.build_statistics, table, discrete_counts=True,
+            options=ExecOptions(mesh=d),
         )
         _, t_ev, compiles, census = _eval_pass(table, queries, plane=d)
         pps[d] = table.num_partitions / max(t_sk, 1e-9)

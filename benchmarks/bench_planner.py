@@ -1,0 +1,233 @@
+"""Error-bounded planner benchmark: partitions read vs error bound.
+
+Serves a realistic mixed workload through `repro.planner.QueryPlanner` —
+ad-hoc queries (the context's held-out test workload) plus dashboard
+queries over hot group-bys backed by materialized views — and compares
+the partitions read against two baselines at **equal empirical error**:
+
+  * **uniform** — for each query, the smallest uniform-sampling budget
+    whose (3-seed mean) empirical error matches what the planner
+    achieved; the paper's universal straw man.
+  * **fixed-budget picker** — the PS³ picker at the planner's own read
+    count; shows what the error-bounded contract costs versus already
+    knowing the right budget.
+
+In-run asserts are part of the contract (like bench_streaming's):
+
+  * coverage: empirical error ≤ the stated bound on ≥ 90% of queries;
+  * reads: at the 5% bound the planner reads ≤ 0.5× the partitions the
+    uniform baseline needs for equal empirical error;
+  * census-flat escalation: on the device backend, compile count stays
+    ≤ the chunk-shape census of the distinct query signatures —
+    independent of how many escalation rounds or budgets were run,
+    because every chunk read ships exactly `PlannerConfig.chunk`
+    partitions (one shape bucket).
+
+Gated by `check_regression.py`: reads_vs_uniform (lower), ci_coverage
+(higher), planner_compiles (lower).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import get_context, write_result
+from repro.backends import ExecOptions
+from repro.data.table import Table
+from repro.planner import PlannerConfig, QueryPlanner, ViewStore
+from repro.queries import device
+from repro.queries.engine import AnswerStore, per_partition_answers
+from repro.queries.ir import Aggregate, Clause, Predicate, Query
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+BOUNDS = (0.02, 0.05, 0.10)
+GATE_BOUND = 0.05
+N_DASH = 6  # dashboard (view-backed) queries in the mix
+UNIFORM_SEEDS = 2 if QUICK else 3
+DEVICE_QUERIES = 3 if QUICK else 6  # census section size
+
+
+def _rel_err(keys_e, est, keys_t, truth) -> float:
+    """Benchmark metric: mean over truth groups × aggregates of the
+    capped relative error; a missed group scores 1.0."""
+    if keys_t.size == 0:
+        return 0.0
+    lut = {int(k): i for i, k in enumerate(keys_e)}
+    tot, cnt = 0.0, 0
+    for gi, k in enumerate(keys_t):
+        i = lut.get(int(k))
+        for j in range(truth.shape[1]):
+            t = truth[gi, j]
+            if np.isnan(t):
+                continue
+            if i is None or np.isnan(est[i, j]):
+                tot += 1.0
+            else:
+                tot += min(abs(est[i, j] - t) / max(abs(t), 1e-12), 1.0)
+            cnt += 1
+    return tot / max(cnt, 1)
+
+
+def _uniform_budget_for(ans, target: float, n: int, step: int) -> int:
+    """Smallest uniform budget whose mean error over seeds ≤ target."""
+    keys_t, truth = ans.group_keys, ans.truth()
+    for b in range(step, n + 1, step):
+        errs = []
+        for s in range(UNIFORM_SEEDS):
+            ids = np.random.default_rng((s, b)).choice(n, b, replace=False)
+            est = ans.estimate(ids, np.full(b, n / b))
+            errs.append(_rel_err(keys_t, est, keys_t, truth))
+        if float(np.mean(errs)) <= max(target, 1e-9):
+            return b
+    return n
+
+
+def _dashboards(table) -> tuple[list[Query], list[tuple]]:
+    """Hot dashboard queries + the (groupby, aggregates) views that
+    answer them exactly — repeated group-bys with at most categorical
+    filters, the workload views exist for."""
+    gcols = table.groupable_columns
+    pos = [s.name for s in table.schema if getattr(s, "positive", False)]
+    aggs = (Aggregate("count"),) + (
+        (Aggregate("sum", ((1.0, pos[0]),)),) if pos else ()
+    )
+    queries, views = [], []
+    for i in range(min(N_DASH, 2 * len(gcols))):
+        col = gcols[i % len(gcols)]
+        if i < len(gcols):
+            q = Query(aggs, Predicate(), (col,))
+        else:  # filtered dashboard: categorical clause on a view column
+            other = gcols[(i + 1) % len(gcols)]
+            card = table.spec(other).cardinality
+            q = Query(
+                aggs,
+                Predicate.conjunction([Clause(other, "<", card // 2)]),
+                (col,),
+            )
+            col = (col, other)
+        vcols = (col,) if isinstance(col, str) else col
+        views.append((tuple(vcols), aggs))
+        queries.append(q)
+    return queries, views
+
+
+def _mk_session(ctx, options, register_views=True):
+    answers = AnswerStore(ctx.table, options=options)
+    views = ViewStore(ctx.table, options=options)
+    planner = QueryPlanner(ctx.art.picker, answers, views=views)
+    if register_views:
+        _, view_defs = _dashboards(ctx.table)
+        for gb, aggs in {v: None for v in view_defs}:
+            views.register(gb, aggs)
+    return planner
+
+
+def run():
+    ctx = get_context("tpch")
+    table = ctx.table
+    n = table.num_partitions
+    host = ExecOptions(backend="host")
+    planner = _mk_session(ctx, host)
+    dash_queries, _ = _dashboards(table)
+    adhoc = list(ctx.test_queries)
+    res: dict = {
+        "partitions": n,
+        "adhoc_queries": len(adhoc),
+        "dash_queries": len(dash_queries),
+        "bounds": list(BOUNDS),
+    }
+
+    truth_of = {}
+    for q in adhoc + dash_queries:
+        truth_of[q.describe()] = per_partition_answers(table, q, options=host)
+
+    step = max(2, n // 32)
+    curve = []
+    for bound in BOUNDS:
+        reads_p, reads_u, reads_f, errs = [], [], [], []
+        for q in adhoc + dash_queries:
+            pa = planner.answer(q, error_bound=bound)
+            ta = truth_of[q.describe()]
+            e = _rel_err(pa.group_keys, pa.estimate, ta.group_keys, ta.truth())
+            errs.append(e)
+            reads_p.append(pa.partitions_read)
+            reads_u.append(
+                0 if ta.truth().size == 0 else
+                _uniform_budget_for(ta, e, n, step)
+            )
+            # fixed-budget picker at the planner's own read count
+            if pa.partitions_read:
+                sel = ctx.art.picker.pick(q, pa.partitions_read)
+                ef = _rel_err(
+                    ta.group_keys, ta.estimate(sel.ids, sel.weights),
+                    ta.group_keys, ta.truth(),
+                )
+            else:
+                ef = e
+            reads_f.append(ef)
+        coverage = float(np.mean([e <= bound for e in errs]))
+        ratio = float(sum(reads_p)) / max(float(sum(reads_u)), 1.0)
+        curve.append(
+            {
+                "bound": bound,
+                "coverage": coverage,
+                "mean_err": float(np.mean(errs)),
+                "planner_reads": int(sum(reads_p)),
+                "uniform_reads_equal_err": int(sum(reads_u)),
+                "reads_vs_uniform": ratio,
+                "fixed_budget_mean_err": float(np.mean(reads_f)),
+            }
+        )
+        print(
+            f"[bench_planner] bound {bound:.0%}: coverage {coverage:.2f}, "
+            f"reads {sum(reads_p)} vs uniform {sum(reads_u)} "
+            f"(ratio {ratio:.2f})"
+        )
+        if bound == GATE_BOUND:
+            res["ci_coverage"] = coverage
+            res["reads_vs_uniform"] = ratio
+            # contract asserts (the ISSUE-6 acceptance criteria)
+            assert coverage >= 0.9, f"coverage {coverage} < 0.9 at {bound}"
+            assert ratio <= 0.5, f"reads ratio {ratio} > 0.5 at {bound}"
+    res["curve"] = curve
+
+    # ---- census-flat escalation on the device backend ---------------------
+    dev = ExecOptions(backend="device")
+    dplanner = _mk_session(ctx, dev, register_views=False)
+    chunk = PlannerConfig().chunk
+    sub = Table(
+        table.schema,
+        {k: v[:chunk] for k, v in table.columns.items()},
+        name=f"{table.name}/censusprobe",
+    )
+    probes = [q for q in adhoc if q.groupby][:DEVICE_QUERIES] or adhoc[:DEVICE_QUERIES]
+    expected = set()
+    for q in probes:
+        expected |= device.workload_census(sub, [q])
+    device.TRACES.reset()
+    rounds = []
+    for q in probes:
+        for bound in (0.10, 0.05):  # two bounds: escalation re-runs chunks
+            pa = dplanner.answer(q, error_bound=bound)
+            rounds.append(pa.plan.rounds)
+    compiles = device.TRACES.total()
+    # flat census: compiles bounded by the distinct chunk-shape signatures,
+    # no matter how many escalation rounds/bounds ran
+    assert compiles <= len(expected), (compiles, len(expected))
+    res["planner_compiles"] = int(compiles)
+    res["census_keys"] = len(expected)
+    res["device_rounds"] = int(sum(rounds))
+    res["chunk_evals"] = planner.chunk_evals + dplanner.chunk_evals
+    print(
+        f"[bench_planner] device census: {compiles} compiles ≤ "
+        f"{len(expected)} chunk-shape keys over {sum(rounds)} rounds"
+    )
+
+    write_result("bench_planner", {"tpch": res})
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ import os
 import numpy as np
 
 from benchmarks.common import timed as _timed, write_result
+from repro.backends import ExecOptions
 from repro.core import ingest
 from repro.core.sketches import SketchStore, build_sketches
 from repro.data.datasets import make_dataset
@@ -42,6 +43,8 @@ def _all_traces() -> int:
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 FULL = os.environ.get("BENCH_FULL", "0") == "1"
+# streaming measures the single-device device backend; mesh pinned off
+DEVICE_OPTS = ExecOptions(backend="device", mesh=None)
 
 # base P sits below its power-of-two bucket so the warm-up + timed appends
 # all land in the reserved slack; enough timed appends that the
@@ -62,8 +65,8 @@ def _append_stream(base_parts, rows):
     """(incremental seconds, telemetry) for N_APPENDS appends."""
     table = _mk(base_parts, rows)
     queries = WorkloadSpec(table, seed=77).sample_workload(N_QUERIES)
-    sketches = SketchStore(table, backend="device", plane=None)
-    answers = AnswerStore(table, backend="device", plane=None)
+    sketches = SketchStore(table, options=DEVICE_OPTS)
+    answers = AnswerStore(table, options=DEVICE_OPTS)
     answers.get_batch(queries)  # warm: compile + fill the LRU
     traces0 = _all_traces()
 
@@ -100,9 +103,10 @@ def run():
 
     # the pre-streaming cost of the same growth: full rebuild per append
     def cold_rebuild():
-        sk = build_sketches(table, backend="device", plane=None)
+        sk = build_sketches(table, options=DEVICE_OPTS)
         ans = per_partition_answers_batch(
-            table, queries, backend="device", cache=EvalCache(table, plane=None)
+            table, queries, cache=EvalCache(table, options=DEVICE_OPTS),
+            options=DEVICE_OPTS,
         )
         return sk, ans
     cold_rebuild()  # compile the grown-table ingest shapes

@@ -46,6 +46,13 @@ GATED = {
     # append_scale is report-only — it compares two separately-warmed runs
     "stream_speedup": ("higher", ("incr_total_s", "cold_total_s")),
     "stream_compiles": ("lower", ()),
+    # bench_planner: all three are count/ratio metrics with no wall-time
+    # basis, so they gate on every platform.  reads_vs_uniform and
+    # ci_coverage also have hard in-run asserts (≤0.5 / ≥0.9); the gate
+    # here catches drift well before the asserts trip.
+    "reads_vs_uniform": ("lower", ()),
+    "ci_coverage": ("higher", ()),
+    "planner_compiles": ("lower", ()),
 }
 MIN_BASIS_SECONDS = 0.15
 

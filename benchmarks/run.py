@@ -22,6 +22,7 @@ MODULES = [
     "bench_train",
     "bench_distributed",
     "bench_streaming",
+    "bench_planner",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",

@@ -1,25 +1,29 @@
 """End-to-end AQP service driver (the paper's kind of serving).
 
-Simulates the production flow on a batch of ad-hoc queries:
-  ingest → kernel sketch construction → picker training (one-time) →
-  batched serving through `repro.serving.BatchPicker` (one vectorized
-  feature pass per batch, answer LRU, bounded jit compiles via the
-  pad-and-bucket clustering kernels) → answer + error accounting vs the
-  exact run.
+Simulates the production flow on a batch of ad-hoc queries through the
+unified `repro.api.Session`:
+  ingest → sketch construction → picker training (one-time, via
+  `Session.prepare`) → optional materialized views over hot group-bys →
+  error-bounded serving (`QuerySpec(error_bound=...)`: the planner
+  escalates partition reads per query until its confidence interval
+  meets the bound) → answer + error accounting vs the exact run.
 
-    PYTHONPATH=src python examples/aqp_service.py [--budget 0.1]
+Pass ``--budget`` to serve with the classic fixed partition budget
+instead of an error bound.
+
+    PYTHONPATH=src python examples/aqp_service.py [--error-bound 0.05]
+    PYTHONPATH=src python examples/aqp_service.py --budget 0.1
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.core.ingest import build_statistics
-from repro.core.picker import PickerConfig, train_picker
+import repro.api as ps3
+from repro.core.picker import PickerConfig
 from repro.data.datasets import make_dataset
-from repro.queries.engine import error_metrics
+from repro.queries.engine import error_metrics, per_partition_answers
 from repro.queries.generator import WorkloadSpec
-from repro.serving import BatchPicker
 
 
 def main():
@@ -27,44 +31,61 @@ def main():
     ap.add_argument("--dataset", default="tpch")
     ap.add_argument("--partitions", type=int, default=128)
     ap.add_argument("--rows", type=int, default=1024)
-    ap.add_argument("--budget", type=float, default=0.1)
+    ap.add_argument("--error-bound", type=float, default=0.05)
+    ap.add_argument("--budget", type=float, default=None,
+                    help="fixed budget as a fraction of partitions "
+                         "(overrides --error-bound)")
     ap.add_argument("--queries", type=int, default=10)
     args = ap.parse_args()
 
-    # ---- ingest: kernel-layer sketch pass (Pallas moments/histogram/bincount)
     table = make_dataset(args.dataset, num_partitions=args.partitions,
                          rows_per_partition=args.rows)
+
+    # ---- one-time preparation: sketches + picker, owned by the session
+    sess = ps3.Session(table)
     t0 = time.perf_counter()
-    stats = build_statistics(table)  # the accelerated ingest pass
-    t_ingest = time.perf_counter() - t0
-    print(f"[ingest] {args.partitions} partitions × {args.rows} rows: "
-          f"{t_ingest:.2f}s kernel sketch pass ({len(stats)} columns)")
-
-    # ---- one-time preparation
-    art = train_picker(
-        table, WorkloadSpec(table, seed=0), num_train_queries=60,
-        config=PickerConfig(num_trees=24, tree_depth=4),
+    sess.prepare(
+        WorkloadSpec(table, seed=0), num_train_queries=60,
+        picker_config=PickerConfig(num_trees=24, tree_depth=4),
     )
-    print(f"[prepare] picker trained in {art.train_seconds:.1f}s")
+    print(f"[prepare] sketches + picker in {time.perf_counter() - t0:.1f}s")
 
-    # ---- serve a batch of unseen queries through the serving engine
+    # ---- hot views: dashboards repeat the same group-bys; materialize one
+    gb = table.groupable_columns[:1]
+    if gb:
+        sess.register_view(gb, (ps3.Aggregate("count"),))
+        print(f"[views] materialized exact counts over {gb}")
+
+    # ---- serve unseen queries through the error-bounded planner
     test = WorkloadSpec(table, seed=777).sample_workload(args.queries)
-    budget = max(1, int(args.budget * args.partitions))
-    server = BatchPicker(art.picker)
-    errs, picked = [], []
-    for q, (est, sel) in zip(test, server.answer_batch(test, budget)):
-        truth = server.cached_answers(q).truth()
+    if args.budget is not None:
+        budget = max(1, int(args.budget * args.partitions))
+        specs = [ps3.QuerySpec(q, budget=budget) for q in test]
+        contract = f"budget {budget}"
+    else:
+        specs = [ps3.QuerySpec(q, error_bound=args.error_bound) for q in test]
+        contract = f"error bound {args.error_bound:.0%}"
+    errs, reads = [], []
+    for q, ans in zip(test, sess.execute_batch(specs)):
+        truth_ans = per_partition_answers(table, q, options=sess.options)
+        truth = truth_ans.truth()
         if truth.size == 0:
             continue
+        est = np.full(truth.shape, np.nan)
+        pos = {int(k): i for i, k in enumerate(ans.group_keys)}
+        for gi, k in enumerate(truth_ans.group_keys):
+            if int(k) in pos:
+                est[gi] = ans.estimate[pos[int(k)]]
         m = error_metrics(truth, est)
         errs.append(m["avg_rel_err"])
-        picked.append(len(sel.ids))
-        print(f"  {q.describe()[:74]:76s} read {len(sel.ids):3d} "
-              f"err {m['avg_rel_err']:.3f}")
-    stats = server.serve_stats()
-    print(f"[serve] mean err {np.mean(errs):.3f} @ {args.budget:.0%} budget; "
-          f"{stats['picks_per_sec']:.1f} picks/s "
-          f"({stats['compiles']} compiles, {stats['shape_buckets']} shape buckets)")
+        reads.append(ans.partitions_read)
+        print(f"  {q.describe()[:66]:68s} mode {ans.plan.mode:7s} "
+              f"read {ans.partitions_read:3d} err {m['avg_rel_err']:.3f}")
+    stats = sess.stats()
+    print(f"[serve] mean err {np.mean(errs):.3f} @ {contract}; "
+          f"mean reads {np.mean(reads):.1f}/{args.partitions} "
+          f"({stats['chunk_evals']} chunk evals, "
+          f"{stats['answer_hits']} answer-cache hits)")
 
 
 if __name__ == "__main__":

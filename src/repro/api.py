@@ -1,0 +1,204 @@
+"""Unified public API: `QuerySpec` + `ExecOptions` + `Session`.
+
+One entry point replaces the constellation of kwargs threaded through
+`build_sketches` / `per_partition_answers_batch` / `train_picker` /
+`BatchPicker`:
+
+    import repro.api as ps3
+
+    sess = ps3.Session(table, options=ps3.ExecOptions(backend="host"))
+    sess.prepare(workload)                       # sketches + picker
+    sess.register_view(("brand",), query.aggregates)   # optional hot view
+    ans = sess.execute(ps3.QuerySpec(query, error_bound=0.05))
+    ans.estimate, ans.ci_halfwidth, ans.partitions_read, ans.plan
+
+`QuerySpec` carries the query IR plus exactly one budgeting contract:
+``error_bound=`` (relative error the answer must meet — the planner
+escalates partition reads until its confidence interval satisfies it),
+``latency_bound=`` (seconds; converted to a partition budget through an
+EMA of the session's observed read rate), or ``budget=`` (the classic
+fixed partition count).
+
+`Session` owns the whole lifecycle — `Table` + `SketchStore` +
+`AnswerStore` + `ViewStore` + trained picker + `QueryPlanner` — and
+keeps every piece consistent across table appends (sketches update
+incrementally, caches invalidate by version, views fold in deltas).
+
+The legacy per-function kwargs (``backend=``, ``plane=``, ``use_ref=``)
+still work everywhere but emit `DeprecationWarning`; new code should
+pass ``options=ExecOptions(...)`` or use a `Session`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.backends import UNSET, ExecOptions, exec_options  # noqa: F401  (re-export)
+from repro.core.features import FeatureBuilder
+from repro.core.picker import PickerConfig, train_picker
+from repro.core.sketches import SketchStore
+from repro.data.table import Table
+from repro.planner import PlannedAnswer, PlannerConfig, QueryPlanner, ViewStore
+from repro.queries.engine import AnswerStore
+from repro.queries.generator import WorkloadSpec
+from repro.queries.ir import Aggregate, Clause, Predicate, Query  # noqa: F401
+
+__all__ = [
+    "Aggregate",
+    "Clause",
+    "ExecOptions",
+    "Predicate",
+    "Query",
+    "QuerySpec",
+    "Session",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """A query plus exactly one budgeting contract."""
+
+    query: Query
+    error_bound: float | None = None  # relative error the answer must meet
+    latency_bound: float | None = None  # seconds (→ budget via read-rate EMA)
+    budget: int | None = None  # fixed partition count (legacy contract)
+
+    def __post_init__(self):
+        given = [
+            k
+            for k in ("error_bound", "latency_bound", "budget")
+            if getattr(self, k) is not None
+        ]
+        if len(given) != 1:
+            raise ValueError(
+                "QuerySpec needs exactly one of error_bound= / latency_bound= "
+                f"/ budget=, got {given or 'none'}"
+            )
+        if self.error_bound is not None and not 0 < self.error_bound <= 1:
+            raise ValueError(f"error_bound must be in (0, 1], got {self.error_bound}")
+        if self.latency_bound is not None and self.latency_bound <= 0:
+            raise ValueError(f"latency_bound must be positive, got {self.latency_bound}")
+        if self.budget is not None and self.budget < 1:
+            raise ValueError(f"budget must be >= 1, got {self.budget}")
+
+
+class Session:
+    """Facade owning the full PS³ lifecycle for one table.
+
+    Construction is cheap; `prepare()` does the one-time work (sketches +
+    picker training).  `execute()` answers `QuerySpec`s through the
+    error-bounded planner; everything stays consistent across
+    `Table.append` (incremental sketches, version-checked caches,
+    delta-maintained views).
+    """
+
+    def __init__(
+        self,
+        table: Table,
+        *,
+        options: ExecOptions | None = None,
+        planner_config: PlannerConfig | None = None,
+        answer_capacity: int = 256,
+    ):
+        self.table = table
+        self.options = options if options is not None else ExecOptions()
+        self.sketches = SketchStore(table, options=self.options)
+        self.answers = AnswerStore(
+            table, capacity=answer_capacity, options=self.options
+        )
+        self.views = ViewStore(table, options=self.options)
+        self.planner_config = planner_config or PlannerConfig()
+        self.picker = None
+        self.planner: QueryPlanner | None = None
+        self._fb_version = -1
+        # partitions/sec EMA for latency_bound → budget conversion;
+        # starts None: the first latency-bounded query measures the rate
+        self._rate: float | None = None
+        self._executed = 0
+
+    # ---- one-time preparation ---------------------------------------------
+    def prepare(
+        self,
+        workload: WorkloadSpec | None = None,
+        num_train_queries: int = 48,
+        picker_config: PickerConfig | None = None,
+    ) -> "Session":
+        """Train the picker (one-time per table/layout/workload)."""
+        workload = workload or WorkloadSpec(self.table)
+        fb = FeatureBuilder(self.table, self.sketches.sketches())
+        art = train_picker(
+            self.table,
+            workload,
+            num_train_queries=num_train_queries,
+            config=picker_config,
+            fb=fb,
+            options=self.options,
+        )
+        self.picker = art.picker
+        self.planner = QueryPlanner(
+            self.picker, self.answers, views=self.views, config=self.planner_config
+        )
+        self._fb_version = self.table.version
+        return self
+
+    def register_view(
+        self, groupby: tuple[str, ...], aggregates: tuple[Aggregate, ...]
+    ):
+        """Materialize exact totals for a hot group-by (hybrid mode)."""
+        return self.views.register(groupby, aggregates)
+
+    # ---- execution --------------------------------------------------------
+    def _require_planner(self) -> QueryPlanner:
+        if self.planner is None:
+            raise RuntimeError("Session.prepare() must run before execute()")
+        if self.table.version != self._fb_version:
+            # table grew: refresh features from the (incrementally
+            # updated) sketches so selectivity/outliers see new partitions
+            fb = FeatureBuilder(self.table, self.sketches.sketches())
+            self.picker.fb = fb
+            self.planner.fb = fb
+            self._fb_version = self.table.version
+        return self.planner
+
+    def _budget_for_latency(self, seconds: float) -> int:
+        if self._rate is None:
+            # no observation yet: start conservatively with one chunk
+            return self.planner_config.chunk
+        return max(1, int(self._rate * seconds))
+
+    def execute(self, spec: QuerySpec | Query) -> PlannedAnswer:
+        if isinstance(spec, Query):
+            spec = QuerySpec(spec, error_bound=0.05)
+        planner = self._require_planner()
+        t0 = time.perf_counter()
+        if spec.latency_bound is not None:
+            ans = planner.answer(
+                spec.query, budget=self._budget_for_latency(spec.latency_bound)
+            )
+        elif spec.budget is not None:
+            ans = planner.answer(spec.query, budget=spec.budget)
+        else:
+            ans = planner.answer(spec.query, error_bound=spec.error_bound)
+        dt = max(time.perf_counter() - t0, 1e-6)
+        if ans.partitions_read:
+            rate = ans.partitions_read / dt
+            self._rate = rate if self._rate is None else 0.7 * self._rate + 0.3 * rate
+        self._executed += 1
+        return ans
+
+    def execute_batch(self, specs: list[QuerySpec | Query]) -> list[PlannedAnswer]:
+        return [self.execute(s) for s in specs]
+
+    # ---- observability ----------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "executed": self._executed,
+            "answer_hits": self.answers.hits,
+            "answer_misses": self.answers.misses,
+            "views": len(self.views),
+            "view_incremental_updates": self.views.incremental_updates,
+            "view_full_rebuilds": self.views.full_rebuilds,
+            "chunk_evals": 0 if self.planner is None else self.planner.chunk_evals,
+            "read_rate_ema": self._rate,
+            "num_partitions": self.table.num_partitions,
+        }

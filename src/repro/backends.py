@@ -22,7 +22,9 @@ the single-device path; a degenerate 1-device mesh is bit-identical to it.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
+import warnings
 
 import jax
 
@@ -74,3 +76,105 @@ def kernels_use_ref(use_ref: bool | None = None) -> bool:
     if use_ref is None:
         return jax.default_backend() != "tpu"
     return use_ref
+
+
+# --------------------------------------------------------------------------
+# unified execution options (public API)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """Execution policy for every offline-plane entry point, in one value.
+
+    Consolidates the ``backend=`` / ``plane=`` / ``use_ref=`` keywords that
+    used to be threaded separately through `build_sketches`,
+    `build_statistics`, `per_partition_answers_batch`, `train_picker`,
+    `BatchPicker`, ...  Pass one ``options=ExecOptions(...)`` instead; the
+    old keywords keep working through deprecation shims.
+
+    Fields:
+      * ``backend`` — ``"host"`` | ``"device"`` | None (resolve the
+        platform default, see `resolve_backend`);
+      * ``mesh`` — the partition-axis device mesh: ``"auto"`` (the
+        ``REPRO_MESH`` policy, the default), ``None``/``0``/``"off"``
+        (single-device), an int device count, or a resolved
+        `PartitionPlane` / `jax.sharding.Mesh`;
+      * ``use_ref`` — device-backend kernel form: None = the platform
+        policy (`kernels_use_ref`), True = jnp oracles, False = Pallas.
+
+    Frozen: derive variants with `replace` (e.g.
+    ``opts.replace(backend="host")``).
+    """
+
+    backend: str | None = None
+    mesh: object = "auto"
+    use_ref: bool | None = None
+
+    def __post_init__(self):
+        if self.backend not in (None, ""):
+            resolve_backend(self.backend)  # raises on unknown names
+
+    def resolved_backend(self) -> str:
+        """The concrete backend this policy selects (explicit > env > platform)."""
+        return resolve_backend(self.backend)
+
+    def plane(self):
+        """The resolved `PartitionPlane` (or None for the single-device
+        path).  ``"auto"`` defers to the ``REPRO_MESH`` policy at call
+        time, so one ExecOptions value stays valid across env changes."""
+        from repro.distributed import dataplane
+
+        mesh = self.mesh
+        if mesh == 0 or (isinstance(mesh, str) and mesh.lower() in ("off", "none", "0")):
+            mesh = None
+        return dataplane.resolve_plane(mesh)
+
+    def kernels_ref(self) -> bool:
+        """Resolved oracle-vs-Pallas choice for the device backend."""
+        return kernels_use_ref(self.use_ref)
+
+    def replace(self, **changes) -> "ExecOptions":
+        return dataclasses.replace(self, **changes)
+
+
+class _Unset:
+    """Sentinel distinguishing 'kwarg omitted' from an explicit None."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - repr only
+        return "<unset>"
+
+    def __bool__(self) -> bool:
+        return False
+
+
+UNSET = _Unset()
+
+
+def exec_options(options: ExecOptions | None = None, *, where: str,
+                 stacklevel: int = 3, **legacy) -> ExecOptions:
+    """Shim core: merge deprecated per-call keywords into an `ExecOptions`.
+
+    ``legacy`` holds the function's old keywords (``backend=``, ``plane=``,
+    ``use_ref=``) with `UNSET` defaults; any that were actually passed are
+    folded into the returned options (``plane`` maps to ``mesh``) with a
+    `DeprecationWarning` naming the call site.  Passing both ``options=``
+    and a legacy keyword is a contradiction and raises.
+    """
+    given = {k: v for k, v in legacy.items() if v is not UNSET}
+    if given and options is not None:
+        raise ValueError(
+            f"{where}: pass options=ExecOptions(...) or the legacy "
+            f"{sorted(given)} keyword(s), not both"
+        )
+    if not given:
+        return options if options is not None else ExecOptions()
+    warnings.warn(
+        f"{where}: the {'/'.join(sorted(given))} keyword(s) are deprecated; "
+        "pass options=repro.api.ExecOptions(...) instead",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+    if "plane" in given:
+        given["mesh"] = given.pop("plane")
+    return ExecOptions(**given)

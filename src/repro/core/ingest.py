@@ -35,6 +35,7 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
+from repro.backends import UNSET, ExecOptions, exec_options
 from repro.data.table import NUMERIC, Table
 from repro.distributed import dataplane
 from repro.kernels import ops
@@ -239,8 +240,10 @@ def build_statistics(
     table: Table,
     use_ref: bool = False,
     discrete_counts: bool = False,
-    plane="auto",
+    plane=UNSET,
     partitions: tuple[int, int] | None = None,
+    *,
+    options: ExecOptions | None = None,
 ) -> dict[str, dict]:
     """Kernel-computed per-column statistics tensors.
 
@@ -268,7 +271,8 @@ def build_statistics(
     """
     from repro.core.clustering import bucket_size
 
-    plane = dataplane.resolve_plane(plane)
+    options = exec_options(options, where="build_statistics", plane=plane)
+    plane = options.plane()
     out: dict[str, dict] = {}
     lo_part, hi_part = partitions if partitions is not None else (0, table.num_partitions)
     p = hi_part - lo_part
@@ -331,15 +335,18 @@ def delta_statistics(
     start: int,
     use_ref: bool = False,
     discrete_counts: bool = False,
-    plane="auto",
+    plane=UNSET,
+    *,
+    options: ExecOptions | None = None,
 ) -> dict[str, dict]:
     """Statistics tensors for only the partitions appended at/after
     ``start`` — the O(new partitions) half of the streaming ingest plane.
     Feed the result to `merge_statistics` together with the pre-append
     tensors to obtain the full-table statistics bit-identically."""
+    options = exec_options(options, where="delta_statistics", plane=plane)
     return build_statistics(
-        table, use_ref=use_ref, discrete_counts=discrete_counts, plane=plane,
-        partitions=(start, table.num_partitions),
+        table, use_ref=use_ref, discrete_counts=discrete_counts,
+        partitions=(start, table.num_partitions), options=options,
     )
 
 

@@ -25,6 +25,7 @@ import time
 
 import numpy as np
 
+from repro.backends import UNSET, ExecOptions, exec_options
 from repro.core import featsel
 from repro.core.clustering import kmeans_select, kmeans_select_unbiased
 from repro.core.features import FeatureBuilder
@@ -222,18 +223,21 @@ def build_training_data(
     table: Table,
     fb: FeatureBuilder,
     queries: list[Query],
-    backend: str | None = None,
+    backend: str | None = UNSET,
     cache: EvalCache | None = None,
+    *,
+    options: ExecOptions | None = None,
 ) -> tuple[list[np.ndarray], list[np.ndarray], list[PartitionAnswers]]:
     """Truth labels + features for a training workload.
 
     Per-partition answers run through `per_partition_answers_batch` — one
-    stacked device pass per shape bucket under ``backend="device"`` — and
+    stacked device pass per shape bucket under the device backend — and
     the shared `EvalCache` keeps group codes and projection casts hot
     across the workload instead of rebuilding them per query.
     """
-    cache = cache or EvalCache(table)
-    answers = per_partition_answers_batch(table, queries, backend=backend, cache=cache)
+    options = exec_options(options, where="build_training_data", backend=backend)
+    cache = cache or EvalCache(table, options=options)
+    answers = per_partition_answers_batch(table, queries, cache=cache, options=options)
     feats = [fb.features(q) for q in queries]
     contribs = [a.contribution() for a in answers]
     return feats, contribs, answers
@@ -246,16 +250,19 @@ def train_picker(
     config: PickerConfig | None = None,
     fb: FeatureBuilder | None = None,
     queries: list[Query] | None = None,
-    backend: str | None = None,
+    backend: str | None = UNSET,
+    *,
+    options: ExecOptions | None = None,
 ) -> TrainedArtifacts:
     t0 = time.perf_counter()
+    options = exec_options(options, where="train_picker", backend=backend)
     config = config or PickerConfig()
     if fb is None:
         from repro.core.sketches import build_sketches
 
-        fb = FeatureBuilder(table, build_sketches(table, backend=backend))
+        fb = FeatureBuilder(table, build_sketches(table, options=options))
     queries = queries or workload.sample_workload(num_train_queries)
-    feats, contribs, answers = build_training_data(table, fb, queries, backend=backend)
+    feats, contribs, answers = build_training_data(table, fb, queries, options=options)
     funnel = train_funnel(
         feats,
         contribs,
@@ -263,7 +270,7 @@ def train_picker(
         num_trees=config.num_trees,
         depth=config.tree_depth,
         seed=config.seed,
-        backend=backend,
+        backend=options.resolved_backend(),
     )
     if config.feature_selection:
         mask = featsel.select_features(

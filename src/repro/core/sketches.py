@@ -29,6 +29,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.backends import UNSET, ExecOptions, exec_options
 from repro.data.table import CATEGORICAL, NUMERIC, Table
 
 NUM_BUCKETS = 10
@@ -318,9 +319,11 @@ def _heavy_hitters_exact(counts: np.ndarray, support: float = HH_SUPPORT):
 
 def build_sketches(
     table: Table,
-    backend: str | None = None,
-    use_ref: bool | None = None,
-    plane="auto",
+    backend: str | None = UNSET,
+    use_ref: bool | None = UNSET,
+    plane=UNSET,
+    *,
+    options: "ExecOptions | None" = None,
 ) -> TableSketches:
     """All per-partition sketches for a table (paper §3.1, Table 1).
 
@@ -342,17 +345,16 @@ def build_sketches(
     `SketchStore`) extends an existing result in O(new partitions),
     bit-identical to re-running this function on the grown table.
     """
-    from repro.backends import resolve_backend
-
-    backend = resolve_backend(backend)
+    options = exec_options(options, where="build_sketches",
+                           backend=backend, use_ref=use_ref, plane=plane)
+    backend = options.resolved_backend()
     stats: dict[str, dict] = {}
     if backend == "device":
-        from repro.backends import kernels_use_ref
         from repro.core.ingest import build_statistics
 
         stats = build_statistics(
-            table, use_ref=kernels_use_ref(use_ref), discrete_counts=True,
-            plane=plane,
+            table, use_ref=options.kernels_ref(), discrete_counts=True,
+            options=options,
         )
 
     cols: dict[str, ColumnSketch] = {}
@@ -425,9 +427,11 @@ def update_sketches(
     sk: TableSketches,
     table: Table,
     start: int,
-    backend: str | None = None,
-    use_ref: bool | None = None,
-    plane="auto",
+    backend: str | None = UNSET,
+    use_ref: bool | None = UNSET,
+    plane=UNSET,
+    *,
+    options: ExecOptions | None = None,
 ) -> TableSketches:
     """Extend ``sk`` (built when ``table`` had ``start`` partitions) to
     cover partitions appended at/after ``start`` — O(new partitions).
@@ -450,10 +454,11 @@ def update_sketches(
     ``tests/test_streaming_ingest.py`` on 1/2/8-device meshes).  Returns a
     new `TableSketches`; the input is not mutated.
     """
-    from repro.backends import resolve_backend
     from repro.core.ingest import discrete_span, int_span, merge_discrete_span
 
-    backend = resolve_backend(backend)
+    options = exec_options(options, where="update_sketches",
+                           backend=backend, use_ref=use_ref, plane=plane)
+    backend = options.resolved_backend()
     if sk.num_partitions != start:
         raise ValueError(
             f"sketch snapshot covers {sk.num_partitions} partitions, "
@@ -468,12 +473,11 @@ def update_sketches(
 
     stats: dict[str, dict] = {}
     if backend == "device":
-        from repro.backends import kernels_use_ref
         from repro.core.ingest import delta_statistics
 
         stats = delta_statistics(
-            table, start, use_ref=kernels_use_ref(use_ref),
-            discrete_counts=True, plane=plane,
+            table, start, use_ref=options.kernels_ref(),
+            discrete_counts=True, options=options,
         )
 
     cols: dict[str, ColumnSketch] = {}
@@ -558,17 +562,19 @@ class SketchStore:
     reads them).
     """
 
-    def __init__(self, table: Table, backend: str | None = None,
-                 use_ref: bool | None = None, plane="auto"):
+    def __init__(self, table: Table, backend: str | None = UNSET,
+                 use_ref: bool | None = UNSET, plane=UNSET, *,
+                 options: ExecOptions | None = None):
+        options = exec_options(options, where="SketchStore",
+                               backend=backend, use_ref=use_ref, plane=plane)
         self.table = table
-        self.backend = backend
-        self.use_ref = use_ref
-        self.plane = plane
+        self.options = options
+        self.backend = options.backend
+        self.use_ref = options.use_ref
+        self.plane = options.mesh
         self.incremental_updates = 0
         self.full_rebuilds = 0
-        self._sk = build_sketches(
-            table, backend=backend, use_ref=use_ref, plane=plane
-        )
+        self._sk = build_sketches(table, options=options)
         self._version = table.version
 
     def sketches(self) -> TableSketches:
@@ -577,15 +583,11 @@ class SketchStore:
             rng = self.table.append_range(self._version)
             if rng is None:
                 self.full_rebuilds += 1
-                self._sk = build_sketches(
-                    self.table, backend=self.backend, use_ref=self.use_ref,
-                    plane=self.plane,
-                )
+                self._sk = build_sketches(self.table, options=self.options)
             else:
                 self.incremental_updates += 1
                 self._sk = update_sketches(
-                    self._sk, self.table, rng[0], backend=self.backend,
-                    use_ref=self.use_ref, plane=self.plane,
+                    self._sk, self.table, rng[0], options=self.options
                 )
             self._version = self.table.version
         return self._sk

@@ -107,13 +107,16 @@ class PS3DataPlane:
     def __init__(self, store: TokenStore, *, budget_frac: float = 0.25,
                  num_train_queries: int = 24, seed: int = 0,
                  backend: str | None = None):
+        from repro.backends import ExecOptions
+
+        options = ExecOptions(backend=backend)
         self.store = store
-        self.fb = FeatureBuilder(store.meta, build_sketches(store.meta, backend=backend))
+        self.fb = FeatureBuilder(store.meta, build_sketches(store.meta, options=options))
         wl = WorkloadSpec(store.meta, seed=seed)
         cfg = PickerConfig(num_trees=16, tree_depth=3, feature_selection=False)
         self.art = train_picker(
             store.meta, wl, num_train_queries=num_train_queries, config=cfg,
-            fb=self.fb, backend=backend,
+            fb=self.fb, options=options,
         )
         self.picker = self.art.picker
         self.budget = max(1, int(budget_frac * store.n_shards))

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+AQP mode serves error-bounded analytics queries through the unified
+`repro.api.Session` instead of the LM decode loop:
+
+    PYTHONPATH=src python -m repro.launch.serve --aqp --error-bound 0.05
 """
 from __future__ import annotations
 
@@ -17,8 +22,47 @@ from repro.models import lm
 from repro.train import steps as steps_mod
 
 
+def aqp_main(args) -> None:
+    """Error-bounded AQP serving loop over the Session facade."""
+    import repro.api as ps3
+    from repro.core.picker import PickerConfig
+    from repro.data.datasets import make_dataset
+    from repro.queries.generator import WorkloadSpec
+
+    table = make_dataset(args.dataset, num_partitions=args.partitions,
+                         rows_per_partition=args.rows, seed=args.seed)
+    sess = ps3.Session(table)
+    t0 = time.perf_counter()
+    sess.prepare(WorkloadSpec(table, seed=args.seed), num_train_queries=32,
+                 picker_config=PickerConfig(num_trees=16, tree_depth=4,
+                                            feature_selection=False))
+    print(f"[aqp] prepared in {time.perf_counter() - t0:.1f}s "
+          f"({table.num_partitions} partitions)")
+    queries = WorkloadSpec(table, seed=args.seed + 777).sample_workload(args.queries)
+    t1 = time.perf_counter()
+    answers = sess.execute_batch(
+        [ps3.QuerySpec(q, error_bound=args.error_bound) for q in queries]
+    )
+    dt = time.perf_counter() - t1
+    reads = [a.partitions_read for a in answers]
+    modes = {}
+    for a in answers:
+        modes[a.plan.mode] = modes.get(a.plan.mode, 0) + 1
+    print(f"[aqp] {len(answers)} queries in {dt:.1f}s @ "
+          f"{args.error_bound:.0%} error bound; "
+          f"mean reads {np.mean(reads):.1f}/{table.num_partitions}; modes {modes}")
+    print(f"[aqp] session stats: {sess.stats()}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--aqp", action="store_true",
+                    help="serve analytics queries via repro.api.Session")
+    ap.add_argument("--dataset", default="tpch")
+    ap.add_argument("--partitions", type=int, default=64)
+    ap.add_argument("--rows", type=int, default=512)
+    ap.add_argument("--error-bound", type=float, default=0.05)
+    ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -27,6 +71,9 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.aqp:
+        return aqp_main(args)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     rng = np.random.default_rng(args.seed)

@@ -20,12 +20,13 @@ training workload or serving batch never recomputes them per query.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import partial
 
 import jax
 import numpy as np
 
-from repro.backends import resolve_backend
+from repro.backends import UNSET, ExecOptions, exec_options
 from repro.data.table import CATEGORICAL, NUMERIC, Table
 from repro.queries.ir import Aggregate, Predicate, Query
 
@@ -200,6 +201,17 @@ def query_key(query: Query) -> str:
     return query.describe()
 
 
+def subset_fingerprint(part_ids: np.ndarray) -> str:
+    """Canonical fingerprint of an ordered partition-id subset.
+
+    Partial (subset) answers are keyed by ``(query_key, this)`` — the
+    planner's escalation rounds each read a different subset of the same
+    query, and an answer for a smaller round must never be served as the
+    answer for a larger one (or as the full-table answer)."""
+    ids = np.ascontiguousarray(np.asarray(part_ids, dtype=np.int64))
+    return hashlib.sha1(ids.tobytes()).hexdigest()
+
+
 # --------------------------------------------------------------------------
 # workload-invariant evaluation cache
 # --------------------------------------------------------------------------
@@ -246,11 +258,12 @@ class EvalCache:
     clear error instead of silently stale answers.
     """
 
-    def __init__(self, table: Table, plane="auto"):
-        from repro.distributed import dataplane
-
+    def __init__(self, table: Table, plane=UNSET, *,
+                 options: ExecOptions | None = None):
+        options = exec_options(options, where="EvalCache", plane=plane)
         self.table = table
-        self.plane = dataplane.resolve_plane(plane)
+        self.options = options
+        self.plane = options.plane()
         self._version = table.version
         self._fp = table.fingerprint()
         self._fp_tick = 0
@@ -503,15 +516,30 @@ class AnswerStore:
     chain contains a non-append mutation, or when an append introduces
     non-finite values on the device backend (those flip per-query
     host-fallback decisions, which would mix fold orders).
+
+    **Partial answers (planner escalation rounds).**  `get_subset`
+    evaluates one query over an explicit partition-id subset and caches
+    the result in a *separate* LRU keyed by ``(query_key,
+    subset_fingerprint)`` — the full-answer cache is keyed by query text
+    alone, so without the subset half of the key an escalation round's
+    partial answer could be served where the full answer (or a larger
+    round's) is expected.  Partial entries are row-local like full ones:
+    they survive pure appends (their partition ids stay valid) and drop
+    with everything else on non-append mutations.
     """
 
     def __init__(self, table: Table, capacity: int = 256,
-                 backend: str | None = None, plane="auto"):
+                 backend: str | None = UNSET, plane=UNSET, *,
+                 options: ExecOptions | None = None):
+        options = exec_options(options, where="AnswerStore",
+                               backend=backend, plane=plane)
         self.table = table
         self.capacity = int(capacity)
-        self.backend = backend
+        self.options = options
+        self.backend = options.backend
         self._cache: dict[str, PartitionAnswers] = {}
-        self._eval_cache = EvalCache(table, plane=plane)
+        self._partial: dict[tuple[str, str], PartitionAnswers] = {}
+        self._eval_cache = EvalCache(table, options=options)
         self._version = table.version
         self.hits = 0
         self.misses = 0
@@ -532,9 +560,7 @@ class AnswerStore:
         backend, non-finite values arriving in the delta change
         `EvalCache.has_posinf`/`has_nonfinite` fallback decisions, and the
         two paths differ in f32 fold order."""
-        from repro.backends import resolve_backend
-
-        if resolve_backend(self.backend) != "device":
+        if self.options.resolved_backend() != "device":
             return True
         for spec in self.table.schema:
             if spec.kind != NUMERIC:
@@ -555,6 +581,7 @@ class AnswerStore:
         rng = self.table.append_range(self._version)
         if rng is None or not self._delta_backend_safe(rng[0]):
             self._cache.clear()
+            self._partial.clear()
         self._version = self.table.version
         self._delta_caches.clear()  # delta views are per-version snapshots
         # surviving entries are merged lazily on access: their raw tensors
@@ -573,13 +600,13 @@ class AnswerStore:
         hit = self._delta_caches.get(start)
         if hit is not None:
             return hit
-        from repro.backends import resolve_backend
-
         t = self.table
         cols = {k: v[start:] for k, v in t.columns.items()}
         view = Table(t.schema, cols, name=f"{t.name}/delta@{start}")
-        cache = EvalCache(view, plane=self._eval_cache.plane)
-        if resolve_backend(self.backend) == "device":
+        # pin the already-resolved plane: the delta view must shard the
+        # way the main stack did, not whatever "auto" resolves to now
+        cache = EvalCache(view, options=self.options.replace(mesh=self._eval_cache.plane))
+        if self.options.resolved_backend() == "device":
             # only the device driver consults these flags (host evaluation
             # is routing-free), so the host backend skips the full-column
             # scans the seeding would otherwise force
@@ -612,7 +639,7 @@ class AnswerStore:
             view, cache = self._delta_view(start)
             fresh = per_partition_answers_batch(
                 view, [ans.query for _, ans in group],
-                backend=self.backend, cache=cache,
+                cache=cache, options=self.options,
             )
             self.delta_evals += len(group)
             self.carried += len(group)
@@ -637,9 +664,44 @@ class AnswerStore:
             return hit
         self.misses += 1
         ans = per_partition_answers(
-            self.table, query, backend=self.backend, cache=self._eval_cache
+            self.table, query, cache=self._eval_cache, options=self.options
         )
         self._insert(key, ans)
+        return ans
+
+    def get_subset(self, query: Query, part_ids: np.ndarray) -> PartitionAnswers:
+        """Exact answers for one query restricted to ``part_ids`` (raw rows
+        in that order) — the planner's escalation-round read path.
+
+        Cached under ``(query_key, subset_fingerprint)`` in a partial-answer
+        LRU that is disjoint from the full-answer cache by construction,
+        so a smaller round's answer can never be served as a larger
+        round's or as the full answer.  When the full answer happens to be
+        held, the subset is sliced from it for free.
+        """
+        self._sync()
+        ids = np.asarray(part_ids, dtype=np.int64)
+        key = (query_key(query), subset_fingerprint(ids))
+        hit = self._partial.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._partial.pop(key, None)
+            self._partial[key] = hit  # re-insert = most recently used
+            return hit
+        full = self._cache.get(key[0])
+        if full is not None and full.raw.shape[0] == self.table.num_partitions:
+            self.hits += 1
+            ans = PartitionAnswers(query, full.group_keys, full.raw[ids], full.plans)
+        else:
+            self.misses += 1
+            t = self.table
+            cols = {k: v[ids] for k, v in t.columns.items()}
+            view = Table(t.schema, cols, name=f"{t.name}/subset")
+            cache = EvalCache(view, options=self.options)
+            ans = per_partition_answers(view, query, cache=cache, options=self.options)
+        self._partial[key] = ans
+        while len(self._partial) > self.capacity:
+            self._partial.pop(next(iter(self._partial)))
         return ans
 
     def get_batch(self, queries: list[Query]) -> list[PartitionAnswers]:
@@ -671,8 +733,8 @@ class AnswerStore:
             evaluated = per_partition_answers_batch(
                 self.table,
                 list(missing.values()),
-                backend=self.backend,
                 cache=self._eval_cache,
+                options=self.options,
             )
             fresh = dict(zip(missing.keys(), evaluated))
         out: list[PartitionAnswers] = []
@@ -730,20 +792,25 @@ def _host_answers(table: Table, query: Query, cache: EvalCache) -> PartitionAnsw
 def per_partition_answers(
     table: Table,
     query: Query,
-    backend: str | None = None,
+    backend: str | None = UNSET,
     cache: EvalCache | None = None,
+    *,
+    options: ExecOptions | None = None,
 ) -> PartitionAnswers:
-    """Exact A_{g,i} for one query; `backend` selects host numpy or the
+    """Exact A_{g,i} for one query; ``options`` selects host numpy or the
     kernel-layer device path (default: `repro.backends.default_backend`)."""
-    return per_partition_answers_batch(table, [query], backend=backend, cache=cache)[0]
+    options = exec_options(options, where="per_partition_answers", backend=backend)
+    return per_partition_answers_batch(table, [query], cache=cache, options=options)[0]
 
 
 def per_partition_answers_batch(
     table: Table,
     queries: list[Query],
-    backend: str | None = None,
+    backend: str | None = UNSET,
     cache: EvalCache | None = None,
-    use_ref: bool | None = None,
+    use_ref: bool | None = UNSET,
+    *,
+    options: ExecOptions | None = None,
 ) -> list[PartitionAnswers]:
     """A_{g,i} for a whole workload — the offline hot path.
 
@@ -760,13 +827,17 @@ def per_partition_answers_batch(
     device column stack and host intermediates across calls; it
     self-synchronizes against table appends (see `EvalCache`).
     """
-    backend = resolve_backend(backend)
-    cache = cache or EvalCache(table)
+    options = exec_options(options, where="per_partition_answers_batch",
+                           backend=backend, use_ref=use_ref)
+    backend = options.resolved_backend()
+    cache = cache or EvalCache(table, options=options)
     cache.check_fingerprint()  # batch boundary: force the mutation guard
     if backend == "device":
         from repro.queries import device
 
-        return device.eval_workload(table, queries, cache=cache, use_ref=use_ref)
+        return device.eval_workload(
+            table, queries, cache=cache, use_ref=options.use_ref
+        )
     return [_host_answers(table, q, cache) for q in queries]
 
 

@@ -37,6 +37,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from repro.backends import UNSET, ExecOptions, exec_options
 from repro.core import clustering
 from repro.core.picker import PS3Picker, Selection
 from repro.queries import device as query_device
@@ -89,11 +90,15 @@ class BatchPicker:
         self,
         picker: PS3Picker,
         answer_capacity: int = 256,
-        backend: str | None = None,
+        backend: str | None = UNSET,
+        *,
+        options: ExecOptions | None = None,
     ):
+        options = exec_options(options, where="BatchPicker", backend=backend)
         self.picker = picker
+        self.options = options
         self.answers = AnswerStore(
-            picker.table, capacity=answer_capacity, backend=backend
+            picker.table, capacity=answer_capacity, options=options
         )
         self.stats = ServingStats()
         # census baseline: report only buckets traced after this instance

@@ -1,0 +1,100 @@
+"""Lint: internal code must not call deprecated kwarg signatures.
+
+The ExecOptions migration keeps the legacy per-function kwargs
+(``backend=``, ``plane=``, ``use_ref=``) working behind deprecation
+shims for external callers, but code in this repository must use
+``options=ExecOptions(...)``.  This walks every call site in src/,
+benchmarks/, examples/ and tools/ and fails on a deprecated keyword
+passed to a migrated entry point — the lint lane runs it so a stray
+``build_sketches(table, backend="device")`` can't creep back in.
+
+Benchmarks that exist specifically to exercise the deprecated-shim
+surface can opt out with a trailing ``# legacy-api: ok`` comment on the
+call line.
+
+    python tools/check_api_usage.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples", "tools")
+OPT_OUT = "# legacy-api: ok"
+
+# migrated entry point → kwargs now deprecated there
+DEPRECATED: dict[str, set[str]] = {
+    "build_sketches": {"backend", "plane", "use_ref"},
+    "update_sketches": {"backend", "plane", "use_ref"},
+    "SketchStore": {"backend", "plane", "use_ref"},
+    # build/delta_statistics keep use_ref as a plain resolved parameter
+    "build_statistics": {"plane"},
+    "delta_statistics": {"plane"},
+    "per_partition_answers": {"backend"},
+    "per_partition_answers_batch": {"backend", "use_ref"},
+    "EvalCache": {"plane"},
+    "AnswerStore": {"backend", "plane"},
+    "build_training_data": {"backend"},
+    "train_picker": {"backend"},
+    "BatchPicker": {"backend"},
+}
+
+
+def _callee_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:  # lint lane runs ruff first, but be explicit
+        return [f"{path}: syntax error: {e}"]
+    lines = src.splitlines()
+    problems = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _callee_name(node)
+        bad = DEPRECATED.get(name or "")
+        if not bad:
+            continue
+        hit = sorted(
+            kw.arg for kw in node.keywords if kw.arg and kw.arg in bad
+        )
+        if not hit:
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if OPT_OUT in line:
+            continue
+        rel = path.relative_to(ROOT)
+        problems.append(
+            f"{rel}:{node.lineno}: {name}({', '.join(k + '=' for k in hit)}...)"
+            " uses deprecated kwargs; pass options=ExecOptions(...)"
+        )
+    return problems
+
+
+def main() -> int:
+    problems: list[str] = []
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            problems.extend(check_file(path))
+    if problems:
+        print(f"{len(problems)} deprecated-API call site(s):")
+        for p in problems:
+            print("  " + p)
+        return 1
+    print("check_api_usage: no deprecated kwarg call sites in " + ", ".join(SCAN_DIRS))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
