@@ -11,23 +11,35 @@ Reports, per dataset:
     bucketing regresses, `eval_compiles` blows up toward the query count,
   * `train_picker` end-to-end wall time on both backends.
 
+  * pure warm `per_partition_answers_batch` eval, host vs device — the
+    fused predicate+aggregate path in isolation, with an in-run assert
+    that warm device eval is at least host-fast on CPU.
+
 The speedup ratios (device-warm over host) are the regression-gated
 metrics: absolute wall times vary with machine speed, the within-run
-ratio does not.  `benchmarks/check_regression.py` diffs them against the
-committed baseline in CI.
+ratio does not.  Their basis walls are summed K-pass times (one shared K
+per ratio, `common.paired_reps`) so every gate clears the checker's
+noise floor unconditionally.  `benchmarks/check_regression.py` diffs
+them against the committed baseline in CI.
 """
 from __future__ import annotations
 
 import os
 
-from benchmarks.common import timed as _timed, timed_min as _timed_min, write_result
-from repro.backends import default_backend
+from benchmarks.common import (
+    paired_reps,
+    timed as _timed,
+    timed_min as _timed_min,
+    timed_sum as _timed_sum,
+    write_result,
+)
+from repro.backends import ExecOptions, default_backend
 from repro.core.picker import PickerConfig, build_training_data, train_picker
 from repro.core.features import FeatureBuilder
 from repro.core.sketches import build_sketches
 from repro.data.datasets import make_dataset
 from repro.queries import device
-from repro.queries.engine import EvalCache
+from repro.queries.engine import EvalCache, per_partition_answers_batch
 from repro.queries.generator import WorkloadSpec
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
@@ -45,14 +57,22 @@ def run(datasets=("tpch", "kdd")):
         queries = WorkloadSpec(table, seed=1234).sample_workload(N_QUERIES)
 
         # ---- sketch construction
-        sk_host, t_sk_host = _timed_min(3, build_sketches, table, backend="host")
+        # speedup bases are summed K-pass walls with one shared K per
+        # ratio (`paired_reps`): single warm passes on this grid sit under
+        # the regression checker's MIN_BASIS_SECONDS noise floor and would
+        # self-skip the gate; the K-sum clears it and the same-K ratio is
+        # still a paired within-run comparison
+        sk_host, est_sk_host = _timed(build_sketches, table, backend="host")
         _, t_sk_dev_cold = _timed(build_sketches, table, backend="device")
-        _, t_sk_dev_warm = _timed_min(3, build_sketches, table, backend="device")
+        _, est_sk_dev = _timed(build_sketches, table, backend="device")
+        k_sk = paired_reps(est_sk_host, est_sk_dev)
+        _, t_sk_host = _timed_sum(k_sk, build_sketches, table, backend="host")
+        _, t_sk_dev_warm = _timed_sum(k_sk, build_sketches, table, backend="device")
 
         # ---- training labels (per-partition answers + features)
         fb = FeatureBuilder(table, sk_host)
-        _, t_lab_host = _timed_min(
-            3, build_training_data, table, fb, queries, backend="host"
+        _, est_lab_host = _timed(
+            build_training_data, table, fb, queries, backend="host"
         )
         device.TRACES.reset()
         cache = EvalCache(table)
@@ -61,8 +81,51 @@ def run(datasets=("tpch", "kdd")):
         )
         compiles = device.TRACES.total()
         census = len(device.workload_census(table, queries, cache))
-        _, t_lab_dev_warm = _timed_min(
-            3, build_training_data, table, fb, queries, backend="device", cache=cache
+        _, est_lab_dev = _timed(
+            build_training_data, table, fb, queries, backend="device", cache=cache
+        )
+        k_lab = paired_reps(est_lab_host, est_lab_dev)
+        _, t_lab_host = _timed_sum(
+            k_lab, build_training_data, table, fb, queries, backend="host"
+        )
+        _, t_lab_dev_warm = _timed_sum(
+            k_lab, build_training_data, table, fb, queries, backend="device",
+            cache=cache,
+        )
+
+        # ---- pure warm query eval: the fused predicate+aggregate path
+        # in isolation (labels above add feature construction on top).
+        # The in-run assert is the ISSUE-7 acceptance bar: warm device
+        # eval must not lose to host numpy on CPU.
+        opts_h = ExecOptions(backend="host")
+        opts_d = ExecOptions(backend="device")
+        ev_cache_h = EvalCache(table, options=opts_h)
+        ev_cache_d = EvalCache(table, options=opts_d)
+        _, t_ev_dev_cold = _timed(
+            per_partition_answers_batch, table, queries, cache=ev_cache_d,
+            options=opts_d,
+        )
+        _, est_ev_dev = _timed(
+            per_partition_answers_batch, table, queries, cache=ev_cache_d,
+            options=opts_d,
+        )
+        _, est_ev_host = _timed(
+            per_partition_answers_batch, table, queries, cache=ev_cache_h,
+            options=opts_h,
+        )
+        k_ev = paired_reps(est_ev_host, est_ev_dev)
+        _, t_ev_host = _timed_sum(
+            k_ev, per_partition_answers_batch, table, queries, cache=ev_cache_h,
+            options=opts_h,
+        )
+        _, t_ev_dev_warm = _timed_sum(
+            k_ev, per_partition_answers_batch, table, queries, cache=ev_cache_d,
+            options=opts_d,
+        )
+        eval_speedup = t_ev_host / max(t_ev_dev_warm, 1e-9)
+        assert eval_speedup >= 1.0, (
+            f"{ds}: warm device eval lost to host "
+            f"({t_ev_dev_warm:.3f}s vs {t_ev_host:.3f}s over {k_ev} passes)"
         )
 
         # ---- end-to-end picker training (funnel on, featsel off so the
@@ -90,9 +153,14 @@ def run(datasets=("tpch", "kdd")):
             "labels_host_s": t_lab_host,
             "labels_device_cold_s": t_lab_dev_cold,
             "labels_device_warm_s": t_lab_dev_warm,
-            "labels_per_sec_host": N_QUERIES / t_lab_host,
-            "labels_per_sec_device_warm": N_QUERIES / t_lab_dev_warm,
+            "labels_per_sec_host": N_QUERIES * k_lab / t_lab_host,
+            "labels_per_sec_device_warm": N_QUERIES * k_lab / t_lab_dev_warm,
             "label_speedup_warm": t_lab_host / max(t_lab_dev_warm, 1e-9),
+            "eval_host_s": t_ev_host,
+            "eval_device_cold_s": t_ev_dev_cold,
+            "eval_device_warm_s": t_ev_dev_warm,
+            "eval_speedup_warm": eval_speedup,
+            "eval_reps": k_ev,
             "train_host_s": t_train_host,
             "train_device_s": t_train_dev,
             "train_speedup": t_train_host / max(t_train_dev, 1e-9),
@@ -101,11 +169,14 @@ def run(datasets=("tpch", "kdd")):
         }
         print(
             f"[bench_offline:{ds}] sketches host {t_sk_host:.2f}s / device "
-            f"{t_sk_dev_warm:.2f}s warm ({t_sk_dev_cold:.2f}s cold); labels "
-            f"host {t_lab_host:.2f}s / device {t_lab_dev_warm:.2f}s warm "
+            f"{t_sk_dev_warm:.2f}s warm over {k_sk} passes "
+            f"({t_sk_dev_cold:.2f}s cold); labels host {t_lab_host:.2f}s / "
+            f"device {t_lab_dev_warm:.2f}s warm over {k_lab} passes "
             f"(x{out[ds]['label_speedup_warm']:.1f}, {compiles} compiles vs "
-            f"census {census}); train host {t_train_host:.1f}s / device "
-            f"{t_train_dev:.1f}s (x{out[ds]['train_speedup']:.1f})"
+            f"census {census}); eval host {t_ev_host:.2f}s / device "
+            f"{t_ev_dev_warm:.2f}s over {k_ev} passes (x{eval_speedup:.2f}); "
+            f"train host {t_train_host:.1f}s / device {t_train_dev:.1f}s "
+            f"(x{out[ds]['train_speedup']:.1f})"
         )
     write_result("bench_offline", out)
     return out

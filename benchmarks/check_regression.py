@@ -21,10 +21,13 @@ import sys
 # A ratio with any sub-measurable basis wall time (below
 # MIN_BASIS_SECONDS in either run) is scheduler noise, not signal — skipped.
 GATED = {
-    # bench_offline
+    # bench_offline — the speedup basis walls are summed K-pass times
+    # (`common.timed_sum` with a shared `paired_reps` K), sized to clear
+    # MIN_BASIS_SECONDS so these gates never self-skip on fast machines
     "label_speedup_warm": ("higher", ("labels_host_s", "labels_device_warm_s")),
     "sketch_speedup_warm": ("higher", ("sketch_host_s", "sketch_device_warm_s")),
     "train_speedup": ("higher", ("train_host_s", "train_device_s")),
+    "eval_speedup_warm": ("higher", ("eval_host_s", "eval_device_warm_s")),
     "eval_compiles": ("lower", ()),
     # bench_train (metrics absent from a baseline file are skipped, so one
     # table serves every benchmark json); binning ratios are reported but
@@ -41,6 +44,10 @@ GATED = {
     "weak_scaling_gate": (
         "higher", ("sketch_d1_s", "eval_d1_s", "sketch_dmax_s", "eval_dmax_s")
     ),
+    # fixed-size sharded-vs-single eval: summed K-pass walls (gates on
+    # every platform — same jitted program both sides, the ratio is a
+    # paired within-run comparison even on forced CPU meshes)
+    "sharded_speedup_eval": ("higher", ("eval_single_s", "eval_sharded_s")),
     # bench_streaming: incremental-append vs cold-rebuild ratio (within-run,
     # machine speed cancels) + the deterministic first-append compile count;
     # append_scale is report-only — it compares two separately-warmed runs
@@ -92,16 +99,37 @@ def check(
     return problems, gated, skipped
 
 
+def _load(path: str) -> dict:
+    """Read a results/baseline JSON in either accepted form.
+
+    Nested `{dataset: {metric: value}}` (the raw `write_result` payload and
+    the committed baselines) passes through; the flat `repro-bench/1`
+    perf-trajectory artifact (`BENCH_<name>.json`, metrics keyed
+    `"<dataset>.<metric>"`) is unflattened on the first dot so either file
+    can be diffed against either.
+    """
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != "repro-bench/1":
+        return data
+    nested: dict = {}
+    for key, val in data.get("metrics", {}).items():
+        ds, _, metric = key.partition(".")
+        if not metric:  # top-level scalar: no dataset grouping to diff
+            continue
+        nested.setdefault(ds, {})[metric] = val
+    return nested
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="fresh results JSON (results/bench/...)")
+    ap.add_argument("current", help="fresh results JSON (results/bench/... — "
+                    "nested payload or flat BENCH_* artifact)")
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--max-ratio", type=float, default=2.0)
     args = ap.parse_args()
-    with open(args.current) as f:
-        current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
+    current = _load(args.current)
+    baseline = _load(args.baseline)
     problems, gated, skipped = check(current, baseline, args.max_ratio)
     if problems:
         print("benchmark regression vs committed baseline:")

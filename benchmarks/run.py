@@ -4,7 +4,12 @@
 
 `--quick` (the CI smoke lane) sets BENCH_QUICK=1 so modules shrink their
 grids; `--full` selects the paper-scale grid.  Results land in
-results/bench/*.json; a summary prints per module.
+results/bench/*.json; a summary prints per module.  Each module also
+emits a machine-readable perf-trajectory artifact
+``results/bench/BENCH_<name>.json`` (schema ``repro-bench/1``, flat
+``"<dataset>.<metric>": float`` map — see `common.write_result`) that CI
+uploads alongside the raw results and `check_regression.py` accepts
+directly.
 """
 from __future__ import annotations
 
@@ -83,6 +88,12 @@ def main() -> None:
           f"override via REPRO_EVAL_BACKEND)")
     for name, status, secs in entries:
         print(f"  {name:<28} {status:<5} {secs:7.1f}s")
+    arts = sorted(
+        f for f in os.listdir("results/bench")
+        if f.startswith("BENCH_") and f.endswith(".json")
+    ) if os.path.isdir("results/bench") else []
+    if arts:
+        print(f"perf-trajectory artifacts (results/bench/): {', '.join(arts)}")
     print(f"{len(todo) - len(failures)}/{len(todo)} benchmarks OK "
           f"in {time.time() - t_all:.0f}s")
     if failures:

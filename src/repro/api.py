@@ -15,9 +15,9 @@ One entry point replaces the constellation of kwargs threaded through
 `QuerySpec` carries the query IR plus exactly one budgeting contract:
 ``error_bound=`` (relative error the answer must meet — the planner
 escalates partition reads until its confidence interval satisfies it),
-``latency_bound=`` (seconds; converted to a partition budget through an
-EMA of the session's observed read rate), or ``budget=`` (the classic
-fixed partition count).
+``latency_bound=`` (seconds; converted to a partition budget through a
+per-(backend, chunk) EMA of the session's observed read rate), or
+``budget=`` (the classic fixed partition count).
 
 `Session` owns the whole lifecycle — `Table` + `SketchStore` +
 `AnswerStore` + `ViewStore` + trained picker + `QueryPlanner` — and
@@ -111,9 +111,13 @@ class Session:
         self.picker = None
         self.planner: QueryPlanner | None = None
         self._fb_version = -1
-        # partitions/sec EMA for latency_bound → budget conversion;
-        # starts None: the first latency-bounded query measures the rate
-        self._rate: float | None = None
+        # partitions/sec EMAs for latency_bound → budget conversion, keyed
+        # by (resolved backend, planner chunk): warm device throughput and
+        # host throughput differ by >2x, and the chunk size changes the
+        # per-read amortization, so one session-wide EMA would thrash when
+        # options/planner_config vary across executes.  Each key starts
+        # absent: the first latency-bounded query under it measures the rate
+        self._rates: dict[tuple[str, int], float] = {}
         self._executed = 0
 
     # ---- one-time preparation ---------------------------------------------
@@ -160,11 +164,16 @@ class Session:
             self._fb_version = self.table.version
         return self.planner
 
+    def _rate_key(self) -> tuple[str, int]:
+        return (self.options.resolved_backend(), self.planner_config.chunk)
+
     def _budget_for_latency(self, seconds: float) -> int:
-        if self._rate is None:
-            # no observation yet: start conservatively with one chunk
+        rate = self._rates.get(self._rate_key())
+        if rate is None:
+            # no observation for this (backend, chunk) yet: start
+            # conservatively with one chunk
             return self.planner_config.chunk
-        return max(1, int(self._rate * seconds))
+        return max(1, int(rate * seconds))
 
     def execute(self, spec: QuerySpec | Query) -> PlannedAnswer:
         if isinstance(spec, Query):
@@ -182,7 +191,9 @@ class Session:
         dt = max(time.perf_counter() - t0, 1e-6)
         if ans.partitions_read:
             rate = ans.partitions_read / dt
-            self._rate = rate if self._rate is None else 0.7 * self._rate + 0.3 * rate
+            key = self._rate_key()
+            old = self._rates.get(key)
+            self._rates[key] = rate if old is None else 0.7 * old + 0.3 * rate
         self._executed += 1
         return ans
 
@@ -199,6 +210,7 @@ class Session:
             "view_incremental_updates": self.views.incremental_updates,
             "view_full_rebuilds": self.views.full_rebuilds,
             "chunk_evals": 0 if self.planner is None else self.planner.chunk_evals,
-            "read_rate_ema": self._rate,
+            "read_rate_ema": self._rates.get(self._rate_key()),
+            "read_rate_emas": dict(self._rates),
             "num_partitions": self.table.num_partitions,
         }

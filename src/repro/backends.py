@@ -99,7 +99,14 @@ class ExecOptions:
         (single-device), an int device count, or a resolved
         `PartitionPlane` / `jax.sharding.Mesh`;
       * ``use_ref`` — device-backend kernel form: None = the platform
-        policy (`kernels_use_ref`), True = jnp oracles, False = Pallas.
+        policy (`kernels_use_ref`), True = jnp oracles, False = Pallas;
+      * ``parity_relaxation`` — opt-in allclose-not-bitwise device fast
+        paths.  Default False keeps the bit-parity contract: every device
+        result is byte-identical to host numpy.  True lets the GBDT
+        boosting update stay device-resident across trees (XLA contracts
+        pred + lr·leaf into an FMA numpy cannot express, and histograms
+        lower scatter-free through the blocked one-hot matmul) — results
+        are allclose to the host fit, not bitwise equal.
 
     Frozen: derive variants with `replace` (e.g.
     ``opts.replace(backend="host")``).
@@ -108,6 +115,7 @@ class ExecOptions:
     backend: str | None = None
     mesh: object = "auto"
     use_ref: bool | None = None
+    parity_relaxation: bool = False
 
     def __post_init__(self):
         if self.backend not in (None, ""):

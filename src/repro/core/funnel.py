@@ -114,10 +114,13 @@ def train_funnel(
     rowsample: float = 0.5,
     colsample: float = 0.7,
     backend: str | None = None,
+    parity_relaxation: bool = False,
 ) -> ImportanceFunnel:
     """k regressors on Algorithm-4 labels; ``backend`` selects the GBDT fit
     execution backend (host numpy vs kernel layer) — the exported forests
-    are bit-identical either way, so calibration (τ) is backend-free."""
+    are bit-identical either way, so calibration (τ) is backend-free.
+    ``parity_relaxation`` opts the device fit into the device-resident
+    boosting update (allclose, not bitwise; see `ExecOptions`)."""
     thresholds = pick_thresholds(contributions, num_models)
     X = np.concatenate(features, axis=0)
     binner = Binner.fit(X)
@@ -143,6 +146,7 @@ def train_funnel(
             colsample=colsample,
             backend=backend,
             codes=codes,
+            parity_relaxation=parity_relaxation,
         )
         pred = forest.predict_codes(codes)  # calibrate on the shared codes
         frac = max(P.mean(), 1.0 / max(len(P), 1))

@@ -33,6 +33,14 @@ path and `core/funnel.py` calibration are backend-independent.  On real
 TPU the Pallas kernel's MXU contraction reorders the sums; there parity is
 allclose, not bitwise (same caveat as every other kernel in the layer).
 
+``fit_gbdt(..., parity_relaxation=True)`` (surfaced as
+``ExecOptions.parity_relaxation``) trades that contract for speed: the
+boosting update stays device-resident across trees (`_fit_tree_resident`
+computes g/h from the on-device predictions and applies ``pred + lr·leaf``
+in-trace, so XLA emits the FMA) and histograms lower scatter-free through
+the blocked one-hot matmul (`tree_hist_matmul_ref`).  The relaxed fit is
+allclose to the host fit — never bitwise — and stays opt-in (default off).
+
 Fixed-depth complete trees keep both paths branch-free; unused subtrees are
 padded (gain −inf splits are frozen into "always left" with value-copying
 leaves), which costs a few wasted nodes but keeps the TPU path regular —
@@ -325,23 +333,18 @@ def _cumsum_seq(x: jax.Array) -> jax.Array:
     return out
 
 
-@partial(jax.jit, static_argnames=("depth", "use_ref"))
-def _fit_tree_device(codes, rows, fs, g, h, lam, mcw, *, depth, use_ref):
-    """One boosting tree as a single traced program.
+def _tree_levels(codes, rows, fs, g, h, lam, mcw, *, depth, use_ref, relaxed=False):
+    """Shared level-wise split search + leaf values for one boosting tree.
 
     codes (Npad, F) int32 resident bin codes; rows (ntp,) int32 sampled row
     ids (-1 = pad, dropped from every reduction); fs (fc,) int32 sampled
-    feature ids; g/h (ntp,) f32 aligned with `rows`.  Returns the tree's
-    dense arrays plus the leaf index of every (padded) row — the boosting
-    update itself happens on the host so ``pred + lr·leaf`` stays two
-    IEEE roundings on both backends (XLA would fuse it into an FMA).
+    feature ids; g/h (ntp,) f32 aligned with `rows`.  ``relaxed`` routes
+    the histograms through the scatter-free blocked-matmul lowering
+    (allclose-only; reachable via `ExecOptions.parity_relaxation`).
     """
     from repro.kernels import ops
 
     npad, n_feat = codes.shape
-    ntp = rows.shape[0]
-    fc = fs.shape[0]
-    TRACES.note("fit_tree", npad, n_feat, ntp, fc, depth)
     nmax = 2 ** (depth - 1)
     n_int = 2**depth - 1
     valid = rows >= 0
@@ -352,7 +355,8 @@ def _fit_tree_device(codes, rows, fs, g, h, lam, mcw, *, depth, use_ref):
         node, feats, thrs = carry
         node_m = jnp.where(valid, node, -1)
         GH = ops.tree_hist_op(
-            codes_sub, fs, node_m, g, h, nmax, n_feat, NUM_BINS, use_ref=use_ref
+            codes_sub, fs, node_m, g, h, nmax, n_feat, NUM_BINS,
+            use_ref=use_ref, relaxed=relaxed,
         )
         GHL = _cumsum_seq(GH)  # (2, nmax, F, B) left-fold prefix sums
         GL, HL = GHL[0], GHL[1]
@@ -382,7 +386,7 @@ def _fit_tree_device(codes, rows, fs, g, h, lam, mcw, *, depth, use_ref):
         node = 2 * node + (code_at > bbs[node]).astype(jnp.int32)
         return node, feats, thrs
 
-    node0 = jnp.zeros(ntp, jnp.int32)
+    node0 = jnp.zeros(rows.shape[0], jnp.int32)
     feats0 = jnp.zeros(n_int + 1, jnp.int32)  # +1 = dump slot for dead pads
     thrs0 = jnp.full(n_int + 1, NUM_BINS, jnp.int32)
     node, feats, thrs = jax.lax.fori_loop(0, depth, level, (node0, feats0, thrs0))
@@ -401,8 +405,47 @@ def _fit_tree_device(codes, rows, fs, g, h, lam, mcw, *, depth, use_ref):
     return feats[:n_int], thrs[:n_int], lv, full
 
 
+@partial(jax.jit, static_argnames=("depth", "use_ref"))
+def _fit_tree_device(codes, rows, fs, g, h, lam, mcw, *, depth, use_ref):
+    """One boosting tree as a single traced program (bit-parity default).
+
+    Returns the tree's dense arrays plus the leaf index of every (padded)
+    row — the boosting update itself happens on the host so
+    ``pred + lr·leaf`` stays two IEEE roundings on both backends (XLA
+    would fuse it into an FMA).
+    """
+    npad, n_feat = codes.shape
+    TRACES.note("fit_tree", npad, n_feat, rows.shape[0], fs.shape[0], depth)
+    return _tree_levels(codes, rows, fs, g, h, lam, mcw, depth=depth, use_ref=use_ref)
+
+
+@partial(jax.jit, static_argnames=("depth", "use_ref"))
+def _fit_tree_resident(codes, rows, fs, y, w, pred, lam, mcw, lr, *, depth, use_ref):
+    """`parity_relaxation` tree program: gradients AND the boosting update
+    stay device-resident, cutting the per-tree host↔device round trip.
+
+    ``pred + lr·lv[full]`` inside one traced program lets XLA contract the
+    multiply-add into an FMA numpy cannot express, and the histograms ride
+    the scatter-free blocked matmul — the fit is allclose to the host
+    forest, NOT bitwise equal (see `ExecOptions.parity_relaxation`).
+    """
+    npad, n_feat = codes.shape
+    TRACES.note("fit_tree_res", npad, n_feat, rows.shape[0], fs.shape[0], depth)
+    valid = rows >= 0
+    rix = jnp.maximum(rows, 0)
+    gfull = w * (pred - y)
+    g = jnp.where(valid, gfull[rix], jnp.float32(0))
+    h = jnp.where(valid, w[rix], jnp.float32(0))
+    feats, thrs, lv, full = _tree_levels(
+        codes, rows, fs, g, h, lam, mcw, depth=depth, use_ref=use_ref, relaxed=True
+    )
+    pred = pred + lr * lv[full]
+    return feats, thrs, lv, pred
+
+
 def _fit_device(
-    codes, y, w, pred, plan, feats, thrs, leaves, *, depth, lr, lam, mcw, use_ref
+    codes, y, w, pred, plan, feats, thrs, leaves, *, depth, lr, lam, mcw, use_ref,
+    parity_relaxation=False,
 ):
     n, n_feat = codes.shape
     npad = _bucket(n)
@@ -412,6 +455,31 @@ def _fit_device(
     lam_d = jnp.float32(lam)
     mcw_d = jnp.float32(mcw)
     lr32 = np.float32(lr)
+    if parity_relaxation:
+        # device-resident boosting: y/w/pred live on device for the whole
+        # forest; each tree reads the running pred and writes it back
+        # in-trace (one transfer in, one out, per FIT instead of per tree)
+        y_d = jnp.asarray(np.pad(y.astype(np.float32), (0, npad - n)))
+        w_d = jnp.asarray(np.pad(w.astype(np.float32), (0, npad - n)))
+        pred_d = jnp.asarray(np.pad(pred.astype(np.float32), (0, npad - n)))
+        lr_d = jnp.float32(lr)
+        for t in range(feats.shape[0]):
+            rows, fs = plan[t]
+            ntp = _bucket(rows.shape[0])
+            rows_p = np.full(ntp, -1, np.int32)
+            rows_p[: rows.shape[0]] = rows
+            feat_t, thr_t, lv, pred_d = _fit_tree_resident(
+                codes_dev,
+                jnp.asarray(rows_p),
+                jnp.asarray(fs.astype(np.int32)),
+                y_d, w_d, pred_d, lam_d, mcw_d, lr_d,
+                depth=depth, use_ref=use_ref,
+            )
+            feats[t] = np.asarray(feat_t)
+            thrs[t] = np.asarray(thr_t)
+            leaves[t] = np.asarray(lv)
+        pred[:] = np.asarray(pred_d)[:n]
+        return
     for t in range(feats.shape[0]):
         rows, fs = plan[t]
         nt = rows.shape[0]
@@ -442,7 +510,10 @@ def _fit_device(
         pred += scaled[np.asarray(full)[:n]]
 
 
-def fit_census(n: int, n_feat: int, depth: int, rowsample: float, colsample: float) -> set:
+def fit_census(
+    n: int, n_feat: int, depth: int, rowsample: float, colsample: float,
+    parity_relaxation: bool = False,
+) -> set:
     """Expected `TRACES` keys for one device fit — the compile upper bound.
 
     One tree program per (row-bucket, feature-count, subsample-bucket,
@@ -451,7 +522,8 @@ def fit_census(n: int, n_feat: int, depth: int, rowsample: float, colsample: flo
     """
     nt = n if rowsample >= 1.0 else min(n, max(32, int(rowsample * n)))
     fc = n_feat if colsample >= 1.0 else max(1, int(colsample * n_feat))
-    return {("fit_tree", _bucket(n), n_feat, _bucket(nt), fc, depth)}
+    kind = "fit_tree_res" if parity_relaxation else "fit_tree"
+    return {(kind, _bucket(n), n_feat, _bucket(nt), fc, depth)}
 
 
 # --------------------------------------------------------------------------
@@ -473,6 +545,7 @@ def fit_gbdt(
     rowsample: float = 1.0,
     backend: str | None = None,
     codes: np.ndarray | None = None,
+    parity_relaxation: bool = False,
 ) -> Forest:
     """Squared-error histogram GBDT (level-wise, fixed depth).
 
@@ -481,7 +554,9 @@ def fit_gbdt(
     bit-identical forests for the same inputs (see module docstring).
     ``codes`` accepts the precomputed `binner.transform(x)` so callers
     fitting several forests on one matrix (the funnel's k models) bin it
-    once instead of per fit.
+    once instead of per fit.  ``parity_relaxation`` (device backend only)
+    keeps the boosting update device-resident — allclose to the host
+    forest, not bitwise (see `ExecOptions.parity_relaxation`).
     """
     from repro.backends import kernels_use_ref, resolve_backend
 
@@ -519,7 +594,7 @@ def fit_gbdt(
     if backend == "device":
         _fit_device(
             codes, y, w, pred, plan, feats, thrs, leaves,
-            use_ref=kernels_use_ref(), **kw,
+            use_ref=kernels_use_ref(), parity_relaxation=parity_relaxation, **kw,
         )
     else:
         _fit_host(codes, y, w, pred, plan, feats, thrs, leaves, **kw)

@@ -271,6 +271,7 @@ def train_picker(
         depth=config.tree_depth,
         seed=config.seed,
         backend=options.resolved_backend(),
+        parity_relaxation=options.parity_relaxation,
     )
     if config.feature_selection:
         mask = featsel.select_features(

@@ -8,7 +8,16 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels import groupagg, histogram, moments, pdist, predicate, ref, tree_hist
+from repro.kernels import (
+    fused,
+    groupagg,
+    histogram,
+    moments,
+    pdist,
+    predicate,
+    ref,
+    tree_hist,
+)
 
 __all__ = [
     "moments_op",
@@ -17,6 +26,7 @@ __all__ = [
     "pdist_sq_op",
     "group_aggregate_op",
     "predicate_eval_op",
+    "fused_eval_op",
     "tree_hist_op",
 ]
 
@@ -51,10 +61,26 @@ def predicate_eval_op(cols, lo, hi, group_map, num_groups: int, use_ref: bool = 
     return predicate.predicate_eval(cols, lo, hi, group_map, num_groups)
 
 
+def fused_eval_op(
+    cols, lo, hi, group_map, values, codes, num_groups: int, use_ref: bool = False
+):
+    """One-launch predicate eval + masked group aggregation."""
+    if use_ref:
+        return ref.fused_eval_ref(cols, lo, hi, group_map, values, codes, num_groups)
+    return fused.fused_eval(cols, lo, hi, group_map, values, codes, num_groups)
+
+
 def tree_hist_op(
     codes, feat_ids, node, g, h,
     num_nodes: int, num_feats: int, num_bins: int = 256, use_ref: bool = False,
+    relaxed: bool = False,
 ):
+    if use_ref and relaxed:
+        # scatter-free blocked-matmul histograms: allclose, not bitwise —
+        # only reachable under ExecOptions.parity_relaxation
+        return ref.tree_hist_matmul_ref(
+            codes, feat_ids, node, g, h, num_nodes, num_feats, num_bins
+        )
     if use_ref:
         return ref.tree_hist_ref(codes, feat_ids, node, g, h, num_nodes, num_feats, num_bins)
     return tree_hist.tree_hist(codes, feat_ids, node, g, h, num_nodes, num_feats, num_bins)

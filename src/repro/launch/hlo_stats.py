@@ -208,8 +208,18 @@ def analyze(hlo_text: str, total_devices: int) -> dict:
                     for o in set(_operands(instr.line))
                 ]
                 result = _shape_bytes(instr.shape)
-                slicelike = instr.op in _SLICELIKE or any(
-                    s in instr.name for s in _SLICELIKE
+                # name-based classification applies only to fusions (XLA
+                # names them after their root op, e.g. %dynamic-update-
+                # slice-fusion.3); a bare substring test misfires —
+                # "gather" sits inside "all-gather", "slice" inside
+                # "dynamic-slice-start" names — double-charging window
+                # traffic for non-slicelike instructions
+                head = instr.name.lstrip("%").split(".", 1)[0]
+                slicelike = instr.op in _SLICELIKE or (
+                    instr.op == "fusion"
+                    and any(
+                        head == s or head.startswith(s + "-") for s in _SLICELIKE
+                    )
                 )
                 if slicelike:
                     # window traffic: result side (slice reads) or update

@@ -13,9 +13,24 @@ bounds are chosen so the float32 row set matches the host comparison
 *bit-exactly* (`_f32_interval`): a float64 constant is snapped to the
 nearest float32 boundary on the correct side, numeric equality becomes
 ``[v, nextafter(v))``, and coded-categorical equality ``[v, v+1)``.
-Predicates the form cannot express — ``in``-lists and ``!=`` — fall back
-to the host path with exact parity (the workload generator produces them
-in ~30% of queries).
+``in``-lists expand to one interval clause per value in the same OR-group
+and ``!=`` to the two-interval complement, so the only remaining host
+fallbacks are genuinely inexpressible rows: non-finite columns under
+``!=`` (NaN ≠ v is True; no interval says so), ``+inf`` under equality,
+non-integer constants against coded categoricals, and clause blowups past
+``MAX_CANON_CLAUSES``.
+
+**Fused launch.**  A canonicalized query runs predicate eval and group
+aggregation as ONE kernel (`kernels/fused.py`, XLA oracle
+`kernels/ref.py::fused_eval_ref`): the row mask is folded into the group
+codes tile-by-tile and contracted as a blocked one-hot matmul, so neither
+the (B, R) mask nor an all-rows one-hot tensor ever lands in HBM, and no
+path depends on XLA's single-threaded scatter.  On CPU single-device
+default (`use_ref is None`, no mesh) the same fused op lowers to a numpy
+executor (`_host_lowered_answers`) — bincount over mask-selected rows —
+which is bit-identical to `engine._host_answers` and faster than it, so
+"device" wins on every backend; pass ``use_ref`` explicitly to pin the
+jitted XLA-ref or Pallas lowering (tests, mesh runs do).
 
 **Stacked batching.**  Queries sharing a shape signature
 ``(C_b, G_b, radix_b, V_b)`` are stacked along the partition axis —
@@ -62,7 +77,12 @@ TRACES = TraceRegistry("query_eval")
 MAX_STACK_ELEMS = 1 << 25
 MAX_STACK_QUERIES = 64
 
+# in-list / != expansion stops here: a wider predicate would blow the
+# clause shape bucket (and the census) for one query — host fallback
+MAX_CANON_CLAUSES = 24
+
 _F32_INF = np.float32(np.inf)
+_F32_TINY = np.float32(np.finfo(np.float32).tiny)  # smallest normal
 
 
 # --------------------------------------------------------------------------
@@ -102,6 +122,58 @@ class CanonicalPredicate:
     num_groups: int
 
 
+def _is_code(v) -> bool:
+    """True when v is an exact integer code value ([v, v+1) is sound)."""
+    try:
+        return float(v) == int(v)
+    except (OverflowError, ValueError):
+        return False
+
+
+def _clause_intervals(
+    table: Table, clause, cache: engine.EvalCache
+) -> list[tuple[np.float32, np.float32]] | None:
+    """Interval expansion of one clause (OR over the list), or None.
+
+    Categorical ``in``/``!=`` expand per code value; numeric ``in``
+    expands to per-value equality intervals and numeric ``!=`` to the
+    two-sided complement — the latter only on all-finite columns, since
+    the host's ``NaN != v`` is True and no interval pair can say so.
+    """
+    if table.spec(clause.col).kind == CATEGORICAL:
+        if clause.op == "==" :
+            return [(np.float32(clause.value), np.float32(clause.value + 1))]
+        if clause.op == "in":
+            if not all(_is_code(v) for v in clause.value):
+                return None  # [v, v+1) would admit code ceil(v): host isin won't
+            return [(np.float32(v), np.float32(v + 1)) for v in clause.value]
+        if clause.op == "!=":
+            if not _is_code(clause.value):
+                return None
+            v = int(clause.value)
+            return [(-_F32_INF, np.float32(v)), (np.float32(v + 1), _F32_INF)]
+        return None  # range ops on codes: host fallback
+    if cache.has_posinf(clause.col):
+        return None  # +inf breaks the half-open equality image
+    if clause.op == "in":
+        # host isin compares in float64 (the list is asarray'd, not a weak
+        # scalar) — the f32 equality interval only matches when the value
+        # IS its own float32 image, and never for non-finite values
+        if not all(
+            np.isfinite(np.float32(v)) and float(np.float32(v)) == float(v)
+            for v in clause.value
+        ):
+            return None
+        return [_f32_interval("==", float(v)) for v in clause.value]
+    if clause.op == "!=":
+        if cache.has_nonfinite(clause.col):
+            return None  # host: NaN != v is True; intervals would say False
+        vf = np.float32(clause.value)
+        return [(-_F32_INF, vf), (np.nextafter(vf, _F32_INF), _F32_INF)]
+    iv = _f32_interval(clause.op, float(clause.value))
+    return None if iv is None else [iv]
+
+
 def canonicalize_predicate(
     table: Table, predicate: Predicate, cache: engine.EvalCache | None = None
 ) -> CanonicalPredicate | None:
@@ -113,19 +185,24 @@ def canonicalize_predicate(
     group_of: list[int] = []
     for g, group in enumerate(predicate.groups):
         for clause in group.clauses:
-            if table.spec(clause.col).kind == CATEGORICAL:
-                if clause.op == "==":
-                    iv = (np.float32(clause.value), np.float32(clause.value + 1))
-                else:  # "in", "!=" and range ops on codes: host fallback
-                    return None
-            else:
-                iv = _f32_interval(clause.op, float(clause.value))
-                if iv is None or cache.has_posinf(clause.col):
-                    return None
-            cols.append(clause.col)
-            lo.append(iv[0])
-            hi.append(iv[1])
-            group_of.append(g)
+            ivs = _clause_intervals(table, clause, cache)
+            if ivs is None:
+                return None
+            # XLA CPU flushes subnormals to zero, so a nonzero-subnormal
+            # boundary (e.g. nextafter(0) from ``<= 0.0``) would compare
+            # as 0 inside the jitted lowerings — host fallback instead
+            if any(
+                b != 0 and np.isfinite(b) and abs(b) < _F32_TINY
+                for iv in ivs for b in iv
+            ):
+                return None
+            for ivl, ivh in ivs:
+                cols.append(clause.col)
+                lo.append(ivl)
+                hi.append(ivh)
+                group_of.append(g)
+    if len(cols) > MAX_CANON_CLAUSES:
+        return None
     return CanonicalPredicate(
         tuple(cols),
         np.asarray(lo, np.float32),
@@ -219,19 +296,6 @@ def _chunks(items: list, size: int):
 # --------------------------------------------------------------------------
 # jitted drivers (trace-counted)
 # --------------------------------------------------------------------------
-def _segment_aggregate(values, mask, codes, radix):
-    """XLA scatter-add formulation of `group_aggregate` (non-TPU lowering).
-
-    The one-hot-matmul kernel oracle materializes a (B, R, radix) tensor;
-    segment_sum is the memory-proportional form XLA lowers well on CPU.
-    """
-    b, v, r = values.shape
-    vals = (values * mask[:, None, :].astype(values.dtype)).transpose(0, 2, 1)
-    seg = (codes + jnp.arange(b, dtype=jnp.int32)[:, None] * radix).reshape(-1)
-    out = jax.ops.segment_sum(vals.reshape(b * r, v), seg, num_segments=b * radix)
-    return out.reshape(b, radix, v).transpose(0, 2, 1)  # (B, V, radix)
-
-
 def _device_inputs(stack, col_idx, coefs, mults):
     """Gather clause columns and derive values/codes from the table stack.
 
@@ -275,15 +339,10 @@ def _eval_core(stack, col_idx, lo, hi, gmap, coefs, mults, *, num_groups, radix,
     lo_b = jnp.repeat(lo, p, axis=0)  # (Qb*P, Cb)
     hi_b = jnp.repeat(hi, p, axis=0)
     gmap_b = jnp.repeat(gmap, p, axis=0)  # (Qb*P, Cb, Gb)
-    if use_ref:
-        clause = (x >= lo_b[:, :, None]) & (x < hi_b[:, :, None])  # (B, Cb, R)
-        # one-hot (disjoint) clause→group maps: OR within a group is sum>0
-        grouped = jnp.einsum("bcr,bcg->bgr", clause.astype(jnp.float32), gmap_b)
-        mask = jnp.all(grouped > 0.5, axis=1)
-        out = _segment_aggregate(values, mask, codes, radix)
-    else:
-        mask, _ = ops.predicate_eval_op(x, lo_b, hi_b, gmap_b, num_groups)
-        out = ops.group_aggregate_op(values, mask, codes, radix)
+    # one launch: predicate mask folded into the blocked one-hot contraction
+    out = ops.fused_eval_op(
+        x, lo_b, hi_b, gmap_b, values, codes, radix, use_ref=use_ref
+    )
     return out.reshape(qb, p, out.shape[1], out.shape[2])
 
 
@@ -295,10 +354,7 @@ def _eval_nopred_core(stack, coefs, mults, *, radix, use_ref):
         stack, jnp.zeros((qb, 1), jnp.int32), coefs, mults
     )
     mask = jnp.ones((values.shape[0], values.shape[2]), jnp.float32)
-    if use_ref:
-        out = _segment_aggregate(values, mask, codes, radix)
-    else:
-        out = ops.group_aggregate_op(values, mask, codes, radix)
+    out = ops.group_aggregate_op(values, mask, codes, radix, use_ref=use_ref)
     return out.reshape(qb, p, out.shape[1], out.shape[2])
 
 
@@ -418,6 +474,58 @@ def _run_chunk(
 
 
 # --------------------------------------------------------------------------
+# numpy lowering of the fused op (single-device CPU default)
+# --------------------------------------------------------------------------
+def _host_lowered_answers(
+    plan: _QueryPlan, cache: engine.EvalCache
+) -> engine.PartitionAnswers:
+    """CPU lowering of the fused predicate+aggregate op.
+
+    Same canonical intervals, same fold-mask-into-codes structure as the
+    kernels — expressed as mask-selected `np.bincount` segment sums, which
+    multi-issue on CPU where XLA's scatter serializes.  Bit-identical to
+    `engine._host_answers` (integer counts are exact in any order; sums
+    accumulate in float64 over the same selected rows in the same row-major
+    order), and ~2× faster: counts ride an unweighted integer bincount and
+    only occupied groups are materialized.
+    """
+    canon, q = plan.canon, plan.query
+    n = cache.table.num_partitions
+    if len(canon.cols) == 0:
+        sel = None
+    else:
+        m: np.ndarray | None = None
+        per_group: dict[int, list[int]] = {}
+        for j, g in enumerate(canon.group_of):
+            per_group.setdefault(g, []).append(j)
+        for idxs in per_group.values():
+            gmask: np.ndarray | None = None
+            for j in idxs:
+                x = cache.f32(canon.cols[j])
+                cm = (x >= canon.lo[j]) & (x < canon.hi[j])
+                gmask = cm if gmask is None else np.logical_or(gmask, cm, out=gmask)
+            m = gmask if m is None else np.logical_and(m, gmask, out=m)
+        sel = np.flatnonzero(m.ravel())
+    seg, radix = cache.segments(q.groupby)
+    segm = seg if sel is None else seg[sel]
+    cnt = np.bincount(segm, minlength=n * radix).reshape(n, radix)
+    occupied = np.flatnonzero(cnt.sum(axis=0))
+    raw = np.zeros((n, occupied.size, plan.n_raw), np.float64)
+    raw[:, :, 0] = cnt[:, occupied]
+    k = 1
+    for agg in q.aggregates:
+        if agg.kind == "count":
+            continue
+        w = cache.projection(agg).reshape(-1)
+        s = np.bincount(
+            segm, weights=w if sel is None else w[sel], minlength=n * radix
+        )
+        raw[:, :, k] = s.reshape(n, radix)[:, occupied]
+        k += 1
+    return engine.PartitionAnswers(q, occupied, raw, plan.plans)
+
+
+# --------------------------------------------------------------------------
 # public entry points
 # --------------------------------------------------------------------------
 def _plan_workload(table: Table, queries: list[Query], cache: engine.EvalCache):
@@ -446,15 +554,27 @@ def eval_workload(
     cache: engine.EvalCache | None = None,
     use_ref: bool | None = None,
 ) -> list[engine.PartitionAnswers]:
-    """Kernel-backed A_{g,i} for a workload; order matches the input."""
+    """Kernel-backed A_{g,i} for a workload; order matches the input.
+
+    Lowering choice: ``use_ref`` pins the jitted XLA ref (True) or the
+    Pallas kernel (False).  Left as None off-TPU with no mesh, the fused
+    op lowers to the numpy executor instead — bit-identical to both and
+    the fastest CPU path (nothing to trace, so the census bound holds
+    trivially).  A mesh or a TPU always takes the jitted route.
+    """
     from repro.backends import kernels_use_ref
 
     cache = cache or engine.EvalCache(table)
-    use_ref = kernels_use_ref(use_ref)
     grouped, fallback = _plan_workload(table, queries, cache)
     out: list[engine.PartitionAnswers | None] = [None] * len(queries)
-    for i, q in fallback:  # in-lists / != : exact-parity host path
+    for i, q in fallback:  # inexpressible predicates: exact-parity host path
         out[i] = engine._host_answers(table, q, cache)
+    if use_ref is None and cache.plane is None and jax.default_backend() != "tpu":
+        for _sig, entries in grouped.items():
+            for i, plan in entries:
+                out[i] = _host_lowered_answers(plan, cache)
+        return out
+    use_ref = kernels_use_ref(use_ref)
     for sig, entries in grouped.items():
         for chunk in _chunks(entries, _max_stack(table, sig, cache.plane)):
             answers = _run_chunk([p for _, p in chunk], cache, use_ref)

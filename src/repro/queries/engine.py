@@ -7,11 +7,13 @@ from it.
 
 Two execution backends with identical semantics (see `repro.backends`):
   * ``backend="host"``   — vectorized numpy (bincount segment sums);
-  * ``backend="device"`` — the kernel layer: `queries.device` routes the
-    predicate + group-aggregate passes through the Pallas kernels behind
-    a shape-bucketed jitted driver, stacking whole query batches into one
-    device pass.  Predicates outside the canonical interval form
-    (``in``-lists, ``!=``) fall back to the host path with exact parity.
+  * ``backend="device"`` — the kernel layer: `queries.device` runs the
+    fused predicate + group-aggregate op behind a shape-bucketed jitted
+    driver, stacking whole query batches into one launch (a numpy
+    lowering of the same op serves the single-device CPU default).
+    Predicates outside the canonical interval form — non-finite columns
+    under ``!=``, ``+inf`` under equality, oversized ``in``-lists — fall
+    back to the host path with exact parity.
 
 `EvalCache` carries the workload-invariant intermediates (group codes per
 group-by tuple, per-column float casts, per-aggregate projections) so a
@@ -21,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from functools import partial
 
 import jax
 import numpy as np
@@ -268,6 +269,7 @@ class EvalCache:
         self._fp = table.fingerprint()
         self._fp_tick = 0
         self._codes: dict[tuple[str, ...], tuple[np.ndarray, int]] = {}
+        self._segs: dict[tuple[str, ...], tuple[np.ndarray, int]] = {}
         self._f64: dict[str, np.ndarray] = {}
         self._f32: dict[str, np.ndarray] = {}
         self._proj: dict[tuple, np.ndarray] = {}
@@ -328,6 +330,7 @@ class EvalCache:
                 "from this snapshot"
             )
         self._codes.clear()
+        self._segs.clear()
         self._f64.clear()
         self._f32.clear()
         self._proj.clear()
@@ -360,6 +363,18 @@ class EvalCache:
         if hit is None:
             self.codes_builds += 1
             hit = self._codes[groupby] = group_codes(self.table, groupby)
+        return hit
+
+    def segments(self, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
+        """((N·R,) flat partition-major segment ids, radix) — the bincount
+        key the numpy lowering of the fused op reuses across a workload."""
+        self._sync()
+        hit = self._segs.get(groupby)
+        if hit is None:
+            codes, radix = self.group_codes(groupby)
+            n = self.table.num_partitions
+            seg = (codes + np.arange(n, dtype=np.int64)[:, None] * radix)
+            hit = self._segs[groupby] = (seg.reshape(-1), radix)
         return hit
 
     def f64(self, col: str) -> np.ndarray:
@@ -866,24 +881,3 @@ def error_metrics(truth: np.ndarray, estimate: np.ndarray) -> dict[str, float]:
         "avg_rel_err": float(rel.mean()),
         "abs_over_true": float((abs_err.mean(axis=0) / denom).mean()),
     }
-
-
-# --------------------------------------------------------------------------
-# JAX execution path (static shapes; oracle for the Pallas kernels)
-# --------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("radix",))
-def masked_group_aggregate(
-    values: jax.Array,  # (rows, n_raw) raw components incl. the ones column
-    mask: jax.Array,  # (rows,) bool
-    codes: jax.Array,  # (rows,) int32 in [0, radix)
-    radix: int,
-) -> jax.Array:
-    """(radix, n_raw) masked segment sums — one partition's answers."""
-    vals = values * mask[:, None].astype(values.dtype)
-    return jax.ops.segment_sum(vals, codes, num_segments=radix)
-
-
-@jax.jit
-def clause_masks(col: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
-    """Range mask lo <= col < hi (canonical numeric clause form)."""
-    return (col >= lo) & (col < hi)

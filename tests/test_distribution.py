@@ -160,3 +160,29 @@ ENTRY %main (x: f32[8,128]) -> f32[8,128] {
     # all-reduce: 8*128*4 bytes * 2 * (3/4) ring, × trip 5
     expected = 8 * 128 * 4 * 2 * (3 / 4) * 5
     assert abs(r["link_bytes_total"] - expected) < 1e-6, r["link_bytes_total"]
+
+
+def test_hlo_stats_slicelike_classification():
+    """Window-traffic discounting is keyed on the op (or a fusion named
+    after a slicelike root), never on a bare name substring: an all-gather
+    carries "gather" in its name, and a fused predicate+aggregate launch
+    contains "slice" inside unrelated instruction names — neither may be
+    billed as a window op (which would undercount its full-tensor bytes)."""
+    from repro.launch import hlo_stats
+
+    txt = """
+HloModule cls
+
+ENTRY %main (x: f32[64,128]) -> f32[64,128] {
+  %x = f32[64,128]{1,0} parameter(0)
+  %all-gather = f32[64,128]{1,0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  %dynamic-update-slice-fusion.3 = f32[64,128]{1,0} fusion(%x, %all-gather), kind=kLoop, calls=%fused
+  ROOT %add.slice_out = f32[64,128]{1,0} add(%x, %dynamic-update-slice-fusion.3)
+}
+"""
+    r = hlo_stats.analyze(txt, 8)
+    t = 64 * 128 * 4  # one f32[64,128] tensor
+    # all-gather: full result + operand (no window discount despite the
+    # "gather" substring); dus-fusion: window-discounted to 3×smallest
+    # (here min(result, 3·t) = t); add: result + two operands
+    assert abs(r["hbm_bytes"] - ((t + t) + t + 3 * t)) < 1e-6, r["hbm_bytes"]

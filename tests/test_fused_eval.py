@@ -1,0 +1,168 @@
+"""Fused predicate+aggregate kernel edge cases, against a numpy oracle.
+
+`test_query_device.py` checks the end-to-end eval routes; this file pins
+the kernel layer itself: `kernels/ref.fused_eval_ref` (the jitted XLA
+lowering) and `kernels/fused.fused_eval` (Pallas, interpret mode off-TPU)
+must both match a dense per-row numpy oracle on the shapes that break
+padding and masking logic — zero-row predicates, all-false masks,
+cardinality-1 group-bys, row counts not divisible by the tile width, and
+NaN rows (which must fail every interval test, the property the Pallas
+pad path relies on).  The blocked one-hot aggregation that both share is
+additionally pinned against a scatter oracle, including dropped (-1)
+codes and block sizes that do not divide the row count.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fused import fused_eval
+
+
+def _oracle(cols, lo, hi, gmap, values, codes, num_groups):
+    """Dense float64 reference for the fused op's semantics."""
+    b, c, r = cols.shape
+    v = values.shape[1]
+    g = gmap.shape[2]
+    out = np.zeros((b, v, num_groups), np.float64)
+    for i in range(b):
+        clause = (cols[i] >= lo[i][:, None]) & (cols[i] < hi[i][:, None])
+        mask = np.ones(r, bool)
+        for gi in range(g):
+            members = gmap[i][:, gi] > 0
+            mask &= clause[members].any(axis=0) if members.any() else np.zeros(r, bool)
+        for rr in np.flatnonzero(mask & (codes[i] >= 0)):
+            out[i, :, codes[i, rr]] += values[i, :, rr]
+    return out
+
+
+def _case(b=2, c=3, g=2, v=2, r=200, num_groups=5, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = (rng.normal(size=(b, c, r)) * 2).astype(np.float32)
+    lo = rng.normal(size=(b, c)).astype(np.float32) - 1.0
+    hi = lo + np.abs(rng.normal(size=(b, c))).astype(np.float32) + 0.5
+    # every OR group gets at least one member clause (round-robin)
+    gmap = np.zeros((b, c, g), np.float32)
+    gmap[:, np.arange(c), np.arange(c) % g] = 1.0
+    values = rng.normal(size=(b, v, r)).astype(np.float32)
+    codes = rng.integers(0, num_groups, size=(b, r)).astype(np.int32)
+    return cols, lo, hi, gmap, values, codes, num_groups
+
+
+def _run(lowering, *case):
+    *arrs, num_groups = case
+    if lowering == "xla-ref":
+        out = ref.fused_eval_ref(*map(jnp.asarray, arrs), num_groups)
+    else:
+        out = fused_eval(*map(jnp.asarray, arrs), num_groups)
+    return np.asarray(out)
+
+
+LOWERINGS = ("xla-ref", "pallas")
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+@pytest.mark.parametrize(
+    "shape",
+    [
+        dict(r=97),  # rows not divisible by any tile width
+        dict(r=130, v=1),  # just over one lane
+        dict(r=513, b=3, c=4, g=3, num_groups=11, seed=3),
+        dict(num_groups=1),  # cardinality-1 group-by: one output column
+        dict(g=1, c=1, r=64),  # single clause, single OR group
+    ],
+    ids=["r97", "r130", "r513-wide", "card1-groups", "single-clause"],
+)
+def test_fused_matches_oracle(lowering, shape):
+    case = _case(**shape)
+    got = _run(lowering, *case)
+    want = _oracle(*case)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_zero_row_predicate_is_exact_zero(lowering):
+    """lo > hi admits no row: the output must be exactly zero, including
+    the blocks the Pallas grid pads past the true row count."""
+    cols, lo, hi, gmap, values, codes, ng = _case(r=150, seed=1)
+    hi = lo - 1.0  # empty interval on every clause
+    got = _run(lowering, cols, lo, hi, gmap, values, codes, ng)
+    np.testing.assert_array_equal(got, 0.0)
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_unmatchable_or_group_masks_everything(lowering):
+    """One OR group whose only member clause matches nothing ANDs the
+    whole mask to false even when other clauses match every row."""
+    cols, lo, hi, gmap, values, codes, ng = _case(c=2, g=2, seed=2)
+    lo[:, 0], hi[:, 0] = -1e9, 1e9  # clause 0 (group 0) matches all rows
+    lo[:, 1], hi[:, 1] = 1e9, 1e9  # clause 1 (group 1) matches none
+    got = _run(lowering, cols, lo, hi, gmap, values, codes, ng)
+    np.testing.assert_array_equal(got, 0.0)
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_nan_rows_fail_every_interval(lowering):
+    """NaN compares false against any bound, so NaN rows drop out — the
+    same property the Pallas row padding depends on."""
+    case = _case(r=140, seed=4)
+    cols = case[0]
+    cols[:, :, ::7] = np.nan
+    got = _run(lowering, *case)
+    want = _oracle(*case)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_lowerings_agree_through_dispatch():
+    """`ops.fused_eval_op` routes use_ref=True/False to the two lowerings;
+    both must agree (allclose — accumulation order differs)."""
+    cols, lo, hi, gmap, values, codes, ng = _case(r=97, seed=5)
+    args = tuple(map(jnp.asarray, (cols, lo, hi, gmap, values, codes)))
+    a = np.asarray(ops.fused_eval_op(*args, ng, use_ref=True))
+    b = np.asarray(ops.fused_eval_op(*args, ng, use_ref=False))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# the blocked one-hot aggregation both lowerings share
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "r,block,ng",
+    [(200, 512, 5), (513, 128, 7), (7, 512, 1), (130, 64, 3)],
+    ids=["under-block", "non-divisible", "tiny-card1", "small-blocks"],
+)
+def test_blocked_onehot_matches_scatter(r, block, ng):
+    rng = np.random.default_rng(r)
+    p, v = 3, 2
+    values = rng.normal(size=(p, v, r)).astype(np.float32)
+    codes = rng.integers(-1, ng, size=(p, r)).astype(np.int32)  # -1 = dropped
+    want = np.zeros((p, v, ng), np.float64)
+    for i in range(p):
+        for rr in np.flatnonzero(codes[i] >= 0):
+            want[i, :, codes[i, rr]] += values[i, :, rr]
+    got = np.asarray(
+        ref.blocked_onehot_aggregate(
+            jnp.asarray(values), jnp.asarray(codes), ng, block_rows=block
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_blocked_onehot_all_dropped_rows():
+    values = jnp.ones((2, 1, 100), jnp.float32)
+    codes = jnp.full((2, 100), -1, jnp.int32)
+    got = np.asarray(ref.blocked_onehot_aggregate(values, codes, 4))
+    np.testing.assert_array_equal(got, 0.0)
+
+
+def test_blocked_onehot_counts_exact_in_f32():
+    """Integer counts (value 1.0 per row) are exact in f32 through the
+    matmul — the property that keeps device counts bitwise equal to host."""
+    rng = np.random.default_rng(6)
+    r, ng = 4096, 3
+    codes = rng.integers(0, ng, size=(1, r)).astype(np.int32)
+    ones = jnp.ones((1, 1, r), jnp.float32)
+    got = np.asarray(ref.blocked_onehot_aggregate(ones, jnp.asarray(codes), ng))
+    want = np.bincount(codes[0], minlength=ng).astype(np.float32)
+    np.testing.assert_array_equal(got[0, 0], want)

@@ -116,8 +116,10 @@ def test_interval_canonicalization_bit_exact():
         np.testing.assert_array_equal((x >= lo) & (x < hi), x == v, err_msg=f"== {v}")
 
 
-def test_fallback_predicates_exactly_match_host():
-    """in-lists and != route through the host path — bitwise identical."""
+def test_expanded_predicates_exactly_match_host():
+    """in-lists and != expand to interval clauses (one per value / the
+    two-sided complement) and stay on the device path — bitwise identical
+    to the host comparison on every lowering."""
     table = edge_table(seed=3)
     cache = EvalCache(table)
     queries = [
@@ -127,9 +129,45 @@ def test_fallback_predicates_exactly_match_host():
               Predicate.conjunction([Clause("g", "!=", 1)])),
         Query((Aggregate("count"),),
               Predicate.conjunction([Clause("x", "!=", 0.5)])),
+        Query((Aggregate("count"),),
+              Predicate.conjunction([Clause("x", "in",
+                                            (0.5, float(np.float32(1.25))))]),
+              ("g",)),
     ]
     for q in queries:
-        assert device.canonicalize_predicate(table, q.predicate) is None
+        canon = device.canonicalize_predicate(table, q.predicate, cache)
+        assert canon is not None
+        assert len(canon.cols) == 2  # one clause per value / complement side
+        host = per_partition_answers(table, q, backend="host", cache=cache)
+        dev = per_partition_answers(table, q, backend="device", cache=cache)
+        assert_answers_match(host, dev, exact=True)
+        for use_ref in (True, False):
+            jitted = device.eval_workload(table, [q], cache=cache, use_ref=use_ref)
+            assert_answers_match(host, jitted[0])
+
+
+def test_inexpressible_predicates_fall_back():
+    """The residue the interval form genuinely cannot express still routes
+    to the host path with exact parity."""
+    table = edge_table(seed=3)
+    table.columns["x"][1, 3] = np.nan  # NaN != v is True; intervals say False
+    cache = EvalCache(table)
+    queries = [
+        Query((Aggregate("count"),),
+              Predicate.conjunction([Clause("x", "!=", 0.5)])),
+        Query((Aggregate("count"),),
+              Predicate.conjunction([Clause("g", "in", (0, 1.5))])),  # not a code
+        Query((Aggregate("count"),),
+              Predicate.conjunction([Clause("pos", "in", (0.1,))])),  # f64-only value
+        Query((Aggregate("count"),),
+              Predicate.conjunction([Clause("pos", "<=", 0.0)])),  # subnormal bound
+        Query((Aggregate("count"),),
+              Predicate.conjunction(
+                  [Clause("g", "in", tuple(range(device.MAX_CANON_CLAUSES + 1)))]
+              )),
+    ]
+    for q in queries:
+        assert device.canonicalize_predicate(table, q.predicate, cache) is None
         host = per_partition_answers(table, q, backend="host", cache=cache)
         dev = per_partition_answers(table, q, backend="device", cache=cache)
         assert_answers_match(host, dev, exact=True)
@@ -205,14 +243,18 @@ def test_compile_count_bounded_by_census():
     queries = WorkloadSpec(table, seed=5).sample_workload(100)
     census = device.workload_census(table, queries, cache)
     device.TRACES.reset()
-    device.eval_workload(table, queries, cache=cache)
+    device.eval_workload(table, queries, cache=cache, use_ref=True)
     traces = device.TRACES.counts()
     assert set(traces) <= census
     assert device.TRACES.total() <= len(census)
     assert device.TRACES.total() < len(queries) / 2
     # warm re-run: zero new traces
-    device.eval_workload(table, queries, cache=cache)
+    device.eval_workload(table, queries, cache=cache, use_ref=True)
     assert device.TRACES.total() <= len(census)
+    # the single-device CPU default lowers to the numpy executor: no traces
+    device.TRACES.reset()
+    device.eval_workload(table, queries, cache=cache)
+    assert device.TRACES.total() == 0
 
 
 def test_eval_cache_amortizes_workload():
