@@ -60,6 +60,13 @@ GATED = {
     "reads_vs_uniform": ("lower", ()),
     "ci_coverage": ("higher", ()),
     "planner_compiles": ("lower", ()),
+    # bench_faults: degraded-answer quality under injected failures —
+    # coverage/error are count-free ratios (gate everywhere); the in-run
+    # assert additionally pins coverage_f05 ≥ 0.9 at the 5% bound
+    "fault_coverage_f05": ("higher", ()),
+    "fault_coverage_f20": ("higher", ()),
+    "fault_err_f05": ("lower", ()),
+    "fault_compiles": ("lower", ()),
 }
 MIN_BASIS_SECONDS = 0.15
 
@@ -99,6 +106,13 @@ def check(
     return problems, gated, skipped
 
 
+def _die(message: str) -> None:
+    """Bad input file (missing/corrupt/mistyped): one actionable line,
+    exit code 2 — distinct from 1, which means a real regression."""
+    print(f"check_regression: {message}", file=sys.stderr)
+    sys.exit(2)
+
+
 def _load(path: str) -> dict:
     """Read a results/baseline JSON in either accepted form.
 
@@ -108,8 +122,19 @@ def _load(path: str) -> dict:
     `"<dataset>.<metric>"`) is unflattened on the first dot so either file
     can be diffed against either.
     """
-    with open(path) as f:
-        data = json.load(f)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        _die(f"cannot read {path}: {e.strerror or e} — "
+             "run the benchmark (or commit its baseline) first")
+    except ValueError as e:
+        _die(f"{path} is not valid JSON ({e}) — "
+             "regenerate it; a truncated write usually means the "
+             "benchmark crashed mid-run")
+    if not isinstance(data, dict):
+        _die(f"{path}: expected a JSON object of benchmark metrics, "
+             f"got {type(data).__name__} — wrong file?")
     if data.get("schema") != "repro-bench/1":
         return data
     nested: dict = {}

@@ -28,6 +28,7 @@ MODULES = [
     "bench_distributed",
     "bench_streaming",
     "bench_planner",
+    "bench_faults",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",

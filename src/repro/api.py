@@ -35,6 +35,17 @@ import time
 
 from repro.backends import UNSET, ExecOptions, exec_options  # noqa: F401  (re-export)
 from repro.core.features import FeatureBuilder
+from repro.errors import (  # noqa: F401  (re-export)
+    BudgetExhaustedError,
+    InjectedCrash,
+    InvalidQueryError,
+    PartitionReadError,
+    ReproError,
+    SessionStateError,
+    StaleStateError,
+    WalCorruptError,
+)
+from repro.faults import FaultPolicy  # noqa: F401  (re-export)
 from repro.core.picker import PickerConfig, train_picker
 from repro.core.sketches import SketchStore
 from repro.data.table import Table
@@ -45,12 +56,21 @@ from repro.queries.ir import Aggregate, Clause, Predicate, Query  # noqa: F401
 
 __all__ = [
     "Aggregate",
+    "BudgetExhaustedError",
     "Clause",
     "ExecOptions",
+    "FaultPolicy",
+    "InjectedCrash",
+    "InvalidQueryError",
+    "PartitionReadError",
     "Predicate",
     "Query",
     "QuerySpec",
+    "ReproError",
     "Session",
+    "SessionStateError",
+    "StaleStateError",
+    "WalCorruptError",
 ]
 
 
@@ -62,6 +82,8 @@ class QuerySpec:
     error_bound: float | None = None  # relative error the answer must meet
     latency_bound: float | None = None  # seconds (→ budget via read-rate EMA)
     budget: int | None = None  # fixed partition count (legacy contract)
+    strict: bool = False  # raise (BudgetExhaustedError / PartitionReadError)
+    # instead of returning a degraded answer — see docs/robustness.md
 
     def __post_init__(self):
         given = [
@@ -70,16 +92,20 @@ class QuerySpec:
             if getattr(self, k) is not None
         ]
         if len(given) != 1:
-            raise ValueError(
+            raise InvalidQueryError(
                 "QuerySpec needs exactly one of error_bound= / latency_bound= "
                 f"/ budget=, got {given or 'none'}"
             )
         if self.error_bound is not None and not 0 < self.error_bound <= 1:
-            raise ValueError(f"error_bound must be in (0, 1], got {self.error_bound}")
+            raise InvalidQueryError(
+                f"error_bound must be in (0, 1], got {self.error_bound}"
+            )
         if self.latency_bound is not None and self.latency_bound <= 0:
-            raise ValueError(f"latency_bound must be positive, got {self.latency_bound}")
+            raise InvalidQueryError(
+                f"latency_bound must be positive, got {self.latency_bound}"
+            )
         if self.budget is not None and self.budget < 1:
-            raise ValueError(f"budget must be >= 1, got {self.budget}")
+            raise InvalidQueryError(f"budget must be >= 1, got {self.budget}")
 
 
 class Session:
@@ -119,6 +145,8 @@ class Session:
         # absent: the first latency-bounded query under it measures the rate
         self._rates: dict[tuple[str, int], float] = {}
         self._executed = 0
+        self._degraded = 0  # answers returned with plan.degraded
+        self._partitions_failed = 0  # failed reads surfaced in answers
 
     # ---- one-time preparation ---------------------------------------------
     def prepare(
@@ -154,7 +182,7 @@ class Session:
     # ---- execution --------------------------------------------------------
     def _require_planner(self) -> QueryPlanner:
         if self.planner is None:
-            raise RuntimeError("Session.prepare() must run before execute()")
+            raise SessionStateError("Session.prepare() must run before execute()")
         if self.table.version != self._fb_version:
             # table grew: refresh features from the (incrementally
             # updated) sketches so selectivity/outliers see new partitions
@@ -182,12 +210,16 @@ class Session:
         t0 = time.perf_counter()
         if spec.latency_bound is not None:
             ans = planner.answer(
-                spec.query, budget=self._budget_for_latency(spec.latency_bound)
+                spec.query,
+                budget=self._budget_for_latency(spec.latency_bound),
+                strict=spec.strict,
             )
         elif spec.budget is not None:
-            ans = planner.answer(spec.query, budget=spec.budget)
+            ans = planner.answer(spec.query, budget=spec.budget, strict=spec.strict)
         else:
-            ans = planner.answer(spec.query, error_bound=spec.error_bound)
+            ans = planner.answer(
+                spec.query, error_bound=spec.error_bound, strict=spec.strict
+            )
         dt = max(time.perf_counter() - t0, 1e-6)
         if ans.partitions_read:
             rate = ans.partitions_read / dt
@@ -195,13 +227,38 @@ class Session:
             old = self._rates.get(key)
             self._rates[key] = rate if old is None else 0.7 * old + 0.3 * rate
         self._executed += 1
+        if ans.plan.degraded:
+            self._degraded += 1
+            self._partitions_failed += ans.plan.partitions_failed
         return ans
 
     def execute_batch(self, specs: list[QuerySpec | Query]) -> list[PlannedAnswer]:
         return [self.execute(s) for s in specs]
 
+    # ---- durability (WAL + snapshot; see repro.wal) ------------------------
+    def save(self, directory: str) -> str:
+        """Snapshot the table AND all derived state (sketches, answer
+        caches, views, picker) to ``directory``; returns the manifest
+        path.  `Session.restore` round-trips bit-identically."""
+        from repro import wal
+
+        return wal.save_snapshot(self, directory)
+
+    @classmethod
+    def restore(cls, directory: str, *, options: ExecOptions | None = None,
+                planner_config: PlannerConfig | None = None) -> "Session":
+        """Rebuild a Session from `save`'s snapshot (+ any WAL tail the
+        caller replays into the table first — see `wal.recover`)."""
+        from repro import wal
+
+        return wal.restore_snapshot(
+            cls, directory, options=options, planner_config=planner_config
+        )
+
     # ---- observability ----------------------------------------------------
     def stats(self) -> dict:
+        planner = self.planner
+        injector = None if planner is None else planner.injector
         return {
             "executed": self._executed,
             "answer_hits": self.answers.hits,
@@ -209,8 +266,11 @@ class Session:
             "views": len(self.views),
             "view_incremental_updates": self.views.incremental_updates,
             "view_full_rebuilds": self.views.full_rebuilds,
-            "chunk_evals": 0 if self.planner is None else self.planner.chunk_evals,
+            "chunk_evals": 0 if planner is None else planner.chunk_evals,
             "read_rate_ema": self._rates.get(self._rate_key()),
             "read_rate_emas": dict(self._rates),
             "num_partitions": self.table.num_partitions,
+            "degraded_answers": self._degraded,
+            "partitions_failed": self._partitions_failed,
+            "fault_report": None if injector is None else injector.report(),
         }

@@ -107,6 +107,13 @@ class ExecOptions:
         pred + lr·leaf into an FMA numpy cannot express, and histograms
         lower scatter-free through the blocked one-hot matmul) — results
         are allclose to the host fit, not bitwise equal.
+      * ``faults`` — a `repro.faults.FaultPolicy` (or None, the default:
+        fault-free).  When set, the fault-aware read paths
+        (`planner.QueryPlanner` chunk reads, `AnswerStore` exact reads)
+        run each partition read through a deterministic seeded injector
+        with retry/backoff/hedging; irrecoverable reads degrade the
+        answer (planner) or raise `errors.PartitionReadError` (exact
+        paths).  See docs/robustness.md.
 
     Frozen: derive variants with `replace` (e.g.
     ``opts.replace(backend="host")``).
@@ -116,6 +123,7 @@ class ExecOptions:
     mesh: object = "auto"
     use_ref: bool | None = None
     parity_relaxation: bool = False
+    faults: object = None  # repro.faults.FaultPolicy | None
 
     def __post_init__(self):
         if self.backend not in (None, ""):

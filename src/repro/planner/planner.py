@@ -37,8 +37,10 @@ import dataclasses
 
 import numpy as np
 
+from repro import faults
 from repro.core.funnel import allocate
 from repro.core.outliers import find_outliers
+from repro.errors import BudgetExhaustedError, InvalidQueryError, PartitionReadError
 from repro.planner.variance import StratifiedEstimate, prior_budget, stratified_answer
 from repro.queries.engine import (
     AnswerStore,
@@ -77,6 +79,12 @@ class QueryPlan:
     outliers: int
     strata_sizes: tuple[int, ...]
     predicted_error: float
+    # robustness plane: degraded-answer report (defaults = fault-free)
+    degraded: bool = False  # failures survived into the answer, or the
+    # error bound stayed unmet after capped escalation
+    partitions_failed: int = 0
+    failed_ids: tuple[int, ...] = ()
+    read_report: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -120,18 +128,36 @@ class QueryPlanner:
         self.views = views
         self.config = config or PlannerConfig()
         self.chunk_evals = 0  # telemetry: chunk reads issued
+        # fault-aware reads: the injector (None when ExecOptions.faults is
+        # unset) gates every chunk read; irrecoverable partitions are
+        # masked inside the padded chunk shapes and the answer degrades —
+        # the planner never raises for read failures unless strict=True
+        self.injector = faults.injector_for(answers.options)
 
     # ---- read path --------------------------------------------------------
-    def _read(self, query, new_ids, state):
+    def _read(self, query, new_ids, state, failed: set | None = None):
         """Evaluate `new_ids` in fixed-`chunk`-size subset views and fold
         them into the accumulated (keys, raw, row_of) state.  Chunks are
         padded by repeating the first id, so every chunk ships exactly
         ``config.chunk`` partitions — one shape bucket, a flat compile
-        census no matter the round or budget."""
+        census no matter the round or budget.
+
+        Under fault injection each chunk's ids first pass through the
+        injector (retry/backoff/hedging happen there, in virtual time);
+        partitions that exhaust their retries land in ``failed`` and are
+        masked *inside* the same padded chunk shape — the survivors pad
+        to exactly ``config.chunk`` as before, so failures never mint a
+        new shape bucket or re-trace (the compile census stays flat)."""
         chunk = self.config.chunk
         keys, raw, row_of = state
         for lo in range(0, len(new_ids), chunk):
             ids = np.asarray(new_ids[lo:lo + chunk], dtype=np.int64)
+            if self.injector is not None:
+                ids, lost = self.injector.read_ids(ids)
+                if failed is not None:
+                    failed.update(int(i) for i in lost)
+                if ids.size == 0:
+                    continue  # whole chunk dead: nothing to evaluate
             n_real = ids.size
             if n_real < chunk:
                 ids = np.concatenate([ids, np.full(chunk - n_real, ids[0])])
@@ -148,9 +174,10 @@ class QueryPlanner:
         query: Query,
         error_bound: float | None = None,
         budget: int | None = None,
+        strict: bool = False,
     ) -> PlannedAnswer:
         if (error_bound is None) == (budget is None):
-            raise ValueError("pass exactly one of error_bound= / budget=")
+            raise InvalidQueryError("pass exactly one of error_bound= / budget=")
         cfg = self.config
         plans, n_raw = plan_aggregates(query.aggregates)
         n_aggs = len(plans)
@@ -199,10 +226,33 @@ class QueryPlanner:
         # (not the candidate count — a probably-empty query must not sink
         # 20% of the table into outlier reads before its first estimate)
         outlier_ids = np.empty(0, np.int64)
+        max_out = max(1, int(cfg.outlier_frac * rung0))
         if query.groupby:
             bits = self.picker._gb_bitmaps(query, candidates)
-            max_out = max(1, int(cfg.outlier_frac * rung0))
             outlier_ids = find_outliers(candidates, bits, max_out)
+        failed: set[int] = set()
+        state = (np.empty(0, np.int64), np.zeros((0, 0, n_raw)), {})
+        if outlier_ids.size:
+            state = self._read(query, outlier_ids, state, failed)
+            # outlier substitution: a failed must-read is often not the
+            # only partition holding its rare groups — recompute the
+            # outlier cover over the still-readable candidates and read
+            # the substitute holders.  Runs BEFORE strata are built so
+            # substitutes join the weight-1 outlier set instead of
+            # double-counting inside a stratum's expansion.  Terminates:
+            # each pass reads only never-attempted ids.
+            while failed:
+                alive = candidates[~np.isin(
+                    candidates, np.fromiter(failed, np.int64, len(failed))
+                )]
+                subs = find_outliers(
+                    alive, self.picker._gb_bitmaps(query, alive), max_out
+                )
+                subs = np.setdiff1d(subs, outlier_ids)
+                if subs.size == 0:
+                    break
+                outlier_ids = np.union1d(outlier_ids, subs)
+                state = self._read(query, subs, state, failed)
         inliers = np.setdiff1d(candidates, outlier_ids)
         strata = self.funnel.classify(feats, inliers)
         strata = [s for s in strata if s.size]
@@ -213,10 +263,10 @@ class QueryPlanner:
         perms = [s[rng.permutation(s.size)] for s in strata]
         total0 = max(0 if budget is not None else 2, rung0 - outlier_ids.size)
         total0 = min(total0, inliers.size)
-        state = (np.empty(0, np.int64), np.zeros((0, 0, n_raw)), {})
-        if outlier_ids.size:
-            state = self._read(query, outlier_ids, state)
-        taken = [0] * len(strata)
+        taken = [0] * len(strata)  # ATTEMPTED prefix per stratum (failed
+        # ids stay counted — the pointer only advances, so escalation
+        # terminates even when every remaining read fails)
+        want = [0] * len(strata)  # surviving-read target per stratum
         schedule: list[int] = []
         total = total0
         est: StratifiedEstimate | None = None
@@ -228,17 +278,44 @@ class QueryPlanner:
                 n_h = max(taken[h], n_h)  # prefix reuse: never shrink
                 if sizes[h] > n_h >= sizes[h] - 1:
                     n_h = sizes[h]  # don't leave a lone unread partition
+                want[h] = max(want[h], n_h)
                 new_ids.extend(int(i) for i in perms[h][taken[h]:n_h])
                 taken[h] = max(taken[h], n_h)
             if new_ids:
-                state = self._read(query, new_ids, state)
+                state = self._read(query, new_ids, state, failed)
+            # replacement substitution: when reads failed, extend each
+            # stratum's attempted prefix until the SURVIVING count reaches
+            # its allocation target (or the stratum runs out of ids).
+            # Terminates: `taken` strictly advances, bounded by `sizes`.
+            while failed:
+                repl: list[int] = []
+                for h, p in enumerate(perms):
+                    lost = sum(1 for i in p[:taken[h]] if int(i) in failed)
+                    deficit = min(want[h], sizes[h] - lost) - (taken[h] - lost)
+                    if deficit > 0:
+                        stop = min(taken[h] + deficit, sizes[h])
+                        repl.extend(int(i) for i in p[taken[h]:stop])
+                        taken[h] = stop
+                if not repl:
+                    break
+                state = self._read(query, repl, state, failed)
             schedule.append(sum(taken))
             keys, raw, row_of = state
             sampled = [p[:t] for p, t in zip(perms, taken)]
-            frac_unread = 1.0 - sum(taken) / max(inliers.size, 1)
+            if failed:
+                # degraded weighting: SRSWOR weights re-expand over the
+                # surviving sample per stratum — N_h/n_h with n_h the
+                # survivors, while N_h keeps the full population
+                fail_arr = np.fromiter(failed, np.int64, len(failed))
+                sampled = [s[~np.isin(s, fail_arr)] for s in sampled]
+            n_survived = sum(s.size for s in sampled)
+            frac_unread = 1.0 - n_survived / max(inliers.size, 1)
+            outlier_read = outlier_ids
+            if failed and outlier_ids.size:
+                outlier_read = outlier_ids[~np.isin(outlier_ids, fail_arr)]
             est = stratified_answer(
-                query, plans, keys, raw, row_of, outlier_ids,
-                strata, sampled, cfg.z, frac_unread,
+                query, plans, keys, raw, row_of, outlier_read,
+                strata, sampled, cfg.z, frac_unread, n_failed=len(failed),
             )
             scales = est.stratum_scales
             estimate, hw, predicted = self._apply_caps(
@@ -251,8 +328,35 @@ class QueryPlanner:
             if predicted <= cfg.safety * error_bound or done_all:
                 break
             total = int(min(np.ceil(total * cfg.growth), inliers.size))
-        partitions_read = outlier_ids.size + sum(taken)
-        if done_all and outlier_ids.size + inliers.size == candidates.size:
+        partitions_read = int(outlier_read.size + n_survived)
+        # degraded contract: failures survived into the answer, or the
+        # error bound stayed unmet after escalating to every readable
+        # candidate / the rounds cap.  Default: report, never raise.
+        bound_unmet = (
+            error_bound is not None and predicted > cfg.safety * error_bound
+        )
+        degraded = bool(failed) or bound_unmet
+        if strict and bound_unmet:
+            # the stronger contract violation: even reading everything
+            # readable could not meet the bound (unachievable bound, or
+            # failures darkened too much of the table)
+            raise BudgetExhaustedError(
+                f"error bound {error_bound} unmet after reading "
+                f"{partitions_read} partition(s) "
+                f"({len(failed)} failed): predicted error "
+                f"{predicted:.4f} exceeds the stopping margin",
+                predicted_error=float(predicted),
+                partitions_read=partitions_read,
+            )
+        if strict and failed:
+            raise PartitionReadError(
+                f"planner: {len(failed)} partition read(s) failed past the "
+                f"retry budget under strict=True",
+                failed_ids=sorted(failed),
+                report=self.injector.report() if self.injector else {},
+            )
+        if (done_all and not failed
+                and outlier_ids.size + inliers.size == candidates.size):
             mode = "exact"
             hw = np.zeros_like(hw)
         elif caps is not None:
@@ -263,6 +367,10 @@ class QueryPlanner:
             mode, error_bound, budget, len(schedule), tuple(schedule),
             int(candidates.size), int(outlier_ids.size), tuple(sizes),
             float(predicted),
+            degraded=degraded,
+            partitions_failed=len(failed),
+            failed_ids=tuple(sorted(failed)),
+            read_report=self.injector.report() if self.injector else {},
         )
         return PlannedAnswer(
             query, est.group_keys if mode != "hybrid" else self._cap_keys(est, caps),

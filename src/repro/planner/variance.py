@@ -148,6 +148,7 @@ def stratified_answer(
     sampled: list[np.ndarray],  # read ids per stratum (⊆ strata[h])
     z: float,
     frac_unread: float,
+    n_failed: int = 0,  # partitions lost past the retry budget (degraded)
 ) -> StratifiedEstimate:
     g, n_raw = raw.shape[1], raw.shape[2]
     n_aggs = len(plans)
@@ -168,6 +169,32 @@ def stratified_answer(
             est_raw = est_raw + (nh_pop / rows.size) * raw[rows].sum(axis=0)
     var_raw = _stratified_var(raw, rows_of, sizes)
 
+    # failed-read bias bound (robustness plane).  Two blind spots the
+    # SRSWOR variance cannot see:
+    #   * a DARK stratum — population but zero surviving reads — is
+    #     invisible to the expansion, which would silently treat it as
+    #     empty;
+    #   * a failed partition whose rare groups were held by weight-1
+    #     outlier reads — the group's column is all-zero across every
+    #     stratum sample, so s²_h (and the CI) collapse to zero while
+    #     the lost mass is real.
+    # Widen the halfwidth by max(N_dark, n_failed) · |mean per-partition
+    # raw| over everything read (max, not sum: dark-stratum partitions
+    # are themselves failed reads).  This is a heuristic BIAS bound, not
+    # a variance term — it assumes a failed partition contributes about
+    # as much as an average read one, which under-covers groups
+    # concentrated in the failed partitions and over-covers uniform
+    # ones — but it keeps a degraded answer from ever claiming an exact
+    # (zero-width) interval over mass it could not read.
+    dark_pop = float(sum(
+        nh for rows, nh in zip(rows_of, sizes) if rows.size == 0 and nh > 0
+    ))
+    lost_pop = max(dark_pop, float(n_failed))
+    if lost_pop and raw.shape[0]:
+        extra_raw = lost_pop * np.abs(raw.mean(axis=0))  # (G, n_raw)
+    else:
+        extra_raw = np.zeros((g, n_raw))
+
     # finalize + CI per aggregate
     cnt = est_raw[:, 0]
     safe_cnt = np.where(np.abs(cnt) > TINY, cnt, np.nan)
@@ -176,10 +203,10 @@ def stratified_answer(
     for j, p in enumerate(plans):
         if p.kind == "count":
             est[:, j] = cnt
-            hw[:, j] = z * np.sqrt(var_raw[:, 0])
+            hw[:, j] = z * np.sqrt(var_raw[:, 0]) + extra_raw[:, 0]
         elif p.kind == "sum":
             est[:, j] = est_raw[:, p.raw_index]
-            hw[:, j] = z * np.sqrt(var_raw[:, p.raw_index])
+            hw[:, j] = z * np.sqrt(var_raw[:, p.raw_index]) + extra_raw[:, p.raw_index]
         else:  # avg = R/C: delta method via residuals d_i = R_i − r̂ C_i
             with np.errstate(invalid="ignore", divide="ignore"):
                 r = est_raw[:, p.raw_index] / safe_cnt

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.backends import UNSET, ExecOptions, exec_options
 from repro.data.table import CATEGORICAL, NUMERIC, Table
+from repro.errors import InvalidQueryError, StaleStateError
 from repro.queries.ir import Aggregate, Predicate, Query
 
 MAX_GROUPS = 4096  # generator guarantees radix product <= this
@@ -54,7 +55,7 @@ def _clause_mask_np(table: Table, clause) -> np.ndarray:
         return col != v
     if op == "in":
         return np.isin(col, np.asarray(v))
-    raise ValueError(op)
+    raise InvalidQueryError(f"unknown predicate operator {op!r}")
 
 
 def predicate_mask(table: Table, predicate: Predicate) -> np.ndarray:
@@ -86,10 +87,10 @@ def group_radix_checked(table: Table, groupby: tuple[str, ...]) -> int:
     for name in groupby:
         spec = table.spec(name)
         if spec.kind != CATEGORICAL:
-            raise ValueError(f"group-by on non-categorical column {name}")
+            raise InvalidQueryError(f"group-by on non-categorical column {name}")
         radix *= spec.cardinality
     if radix > MAX_GROUPS:
-        raise ValueError(f"group radix {radix} exceeds MAX_GROUPS")
+        raise InvalidQueryError(f"group radix {radix} exceeds MAX_GROUPS")
     return radix
 
 
@@ -101,11 +102,11 @@ def group_codes(table: Table, groupby: tuple[str, ...]) -> tuple[np.ndarray, int
     for name in groupby:
         spec = table.spec(name)
         if spec.kind != CATEGORICAL:
-            raise ValueError(f"group-by on non-categorical column {name}")
+            raise InvalidQueryError(f"group-by on non-categorical column {name}")
         codes = codes * spec.cardinality + table.columns[name].astype(np.int64)
         radix *= spec.cardinality
     if radix > MAX_GROUPS:
-        raise ValueError(f"group radix {radix} exceeds MAX_GROUPS")
+        raise InvalidQueryError(f"group radix {radix} exceeds MAX_GROUPS")
     return codes, radix
 
 
@@ -299,7 +300,7 @@ class EvalCache:
         if self.table.version != self._version:
             return
         if self.table.fingerprint() != self._fp:
-            raise RuntimeError(
+            raise StaleStateError(
                 f"table {self.table.name!r} changed without a version "
                 "bump (out-of-band mutation of a column array?); use "
                 "append_partitions/concat_tables(into=) so caches can "
@@ -323,7 +324,7 @@ class EvalCache:
             # longer matches our snapshot: an out-of-band mutation hid
             # behind the append's version bump — carrying answers or the
             # grown stack would serve stale data for the mutated rows
-            raise RuntimeError(
+            raise StaleStateError(
                 f"table {self.table.name!r}: pre-append partitions changed "
                 "outside the append API (out-of-band mutation before "
                 "append_partitions?); caches cannot update incrementally "
@@ -552,6 +553,12 @@ class AnswerStore:
         self.capacity = int(capacity)
         self.options = options
         self.backend = options.backend
+        # fault-aware exact reads: a miss is a full-table scan, which has
+        # no degraded mode — irrecoverable partition reads raise a typed
+        # PartitionReadError instead (see repro.faults / docs/robustness.md)
+        from repro import faults as _faults
+
+        self.injector = _faults.injector_for(options)
         self._cache: dict[str, PartitionAnswers] = {}
         self._partial: dict[tuple[str, str], PartitionAnswers] = {}
         self._eval_cache = EvalCache(table, options=options)
@@ -678,6 +685,10 @@ class AnswerStore:
             self._cache[key] = hit  # re-insert = most recently used
             return hit
         self.misses += 1
+        if self.injector is not None:
+            self.injector.read_ids_strict(
+                np.arange(self.table.num_partitions), "AnswerStore.get"
+            )
         ans = per_partition_answers(
             self.table, query, cache=self._eval_cache, options=self.options
         )
@@ -745,6 +756,10 @@ class AnswerStore:
             held.update(self._refresh(stale))
         fresh: dict[str, PartitionAnswers] = {}
         if missing:
+            if self.injector is not None:
+                self.injector.read_ids_strict(
+                    np.arange(n), "AnswerStore.get_batch"
+                )
             evaluated = per_partition_answers_batch(
                 self.table,
                 list(missing.values()),

@@ -178,6 +178,11 @@ class BatchPicker:
             "answer_delta_evals": self.answers.delta_evals,
             "stack_appends": self.answers._eval_cache.stack_appends,
             "stack_rebuilds": self.answers._eval_cache.stack_rebuilds,
+            # robustness plane: injected-read telemetry (None = fault-free)
+            "fault_report": (
+                None if self.answers.injector is None
+                else self.answers.injector.report()
+            ),
         }
 
 

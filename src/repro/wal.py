@@ -1,0 +1,348 @@
+"""Durability: a write-ahead log for table appends + snapshots of all
+derived state, so a crash mid-append recovers bit-identically.
+
+Two cooperating pieces (see docs/robustness.md):
+
+* **`WriteAheadLog`** — the append log.  `append(table, delta)` makes
+  the delta *durable before it is applied*: the delta columns land in an
+  ``.npz`` record (written to a temp file and `os.replace`d — a record
+  exists iff its rename happened), then a JSON sidecar with the record's
+  sha256 and the pre-append partition count, then the in-memory
+  `append_partitions`.  Replay is idempotent by construction: a record
+  applies iff its ``parts_before`` matches the table's current partition
+  count, so recovering from *any* crash point lands on a consistent
+  pre- or post-append state — never a torn one.
+
+* **Snapshots** — `save_snapshot(session, dir)` persists the table
+  (columns, version, append log) plus every piece of derived state the
+  session owns: the `SketchStore`'s `TableSketches` (summary statistics),
+  the `ViewStore`'s materialized views, the `AnswerStore`'s full and
+  partial answer caches, and the trained picker (funnel forests, cluster
+  mask, config).  The manifest — holding a sha256 per file — is written
+  *last*, so a half-written snapshot is detectably absent rather than
+  silently wrong.  `restore_snapshot` verifies every checksum
+  (`WalCorruptError` on mismatch), rebuilds the `Session`, and grafts
+  the derived state back in; device-resident state (EvalCache column
+  stacks, sharded across whatever mesh is active) is deliberately NOT
+  serialized — it rebuilds deterministically from the restored host
+  columns, which is what makes one snapshot restore bit-identically on
+  1-, 2- and 8-device meshes.
+
+Crash points (`repro.faults` names consumed here): ``wal.record``
+(before the record is durable — the append is lost, pre-append state),
+``wal.apply`` (record durable, table not yet updated — replay applies
+it), ``wal.derived`` (table updated, derived state not yet synced —
+replay skips the record; caches sync lazily through the append log).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import os
+import pickle
+
+import numpy as np
+
+from repro.data.table import ColumnSpec, Table, append_partitions
+from repro.errors import StaleStateError, WalCorruptError
+from repro.faults import FaultInjector, crash_point
+
+_FORMAT = 1
+
+
+# --------------------------------------------------------------------------
+# atomic file helpers
+# --------------------------------------------------------------------------
+def _write_atomic(path: str, data: bytes) -> None:
+    """Durable iff renamed: a crash mid-write leaves only ``*.tmp``."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def _npz_bytes(arrays: dict) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _read_verified(path: str, expect_sha: str, what: str) -> bytes:
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError as e:
+        raise WalCorruptError(f"{what}: cannot read {path!r}: {e}") from e
+    if _sha256(data) != expect_sha:
+        raise WalCorruptError(f"{what}: checksum mismatch for {path!r}")
+    return data
+
+
+# --------------------------------------------------------------------------
+# write-ahead log
+# --------------------------------------------------------------------------
+class WriteAheadLog:
+    """Append log for one table: durable-then-apply partition appends.
+
+    Records are ``NNNNNNNN.npz`` (delta columns) + ``NNNNNNNN.json``
+    (sha256, parts_before); a record exists iff its sidecar does, so a
+    crash between the two writes leaves an ignorable orphan ``.npz``
+    (the tail append was not yet durable), never a half-record.
+    """
+
+    def __init__(self, directory: str, injector: FaultInjector | None = None):
+        self.directory = directory
+        self.injector = injector
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- record enumeration ------------------------------------------------
+    def _record_ids(self) -> list[int]:
+        ids = []
+        for name in os.listdir(self.directory):
+            if name.endswith(".json") and not name.endswith(".tmp"):
+                stem = name[: -len(".json")]
+                if stem.isdigit():
+                    ids.append(int(stem))
+        return sorted(ids)
+
+    def _paths(self, rec_id: int) -> tuple[str, str]:
+        stem = os.path.join(self.directory, f"{rec_id:08d}")
+        return stem + ".npz", stem + ".json"
+
+    # ---- the append path ---------------------------------------------------
+    def append(self, table: Table, delta: dict) -> Table:
+        """Durable-then-apply: WAL record first, `append_partitions` second."""
+        crash_point(self.injector, "wal.record")
+        delta = {k: np.asarray(v) for k, v in delta.items()}
+        payload = _npz_bytes(delta)
+        ids = self._record_ids()
+        rec_id = (ids[-1] + 1) if ids else 0
+        npz_path, meta_path = self._paths(rec_id)
+        _write_atomic(npz_path, payload)
+        meta = {
+            "format": _FORMAT,
+            "record": rec_id,
+            "parts_before": table.num_partitions,
+            "version_before": table.version,
+            "sha256": _sha256(payload),
+        }
+        _write_atomic(meta_path, json.dumps(meta).encode())
+        crash_point(self.injector, "wal.apply")
+        append_partitions(table, delta)
+        crash_point(self.injector, "wal.derived")
+        return table
+
+    # ---- recovery ----------------------------------------------------------
+    def replay(self, table: Table) -> int:
+        """Apply every record the table has not seen; → records applied.
+
+        Idempotent: a record whose ``parts_before`` is behind the table's
+        partition count already applied before the crash and is skipped;
+        one *ahead* of it means a missing record — `WalCorruptError`."""
+        applied = 0
+        for rec_id in self._record_ids():
+            npz_path, meta_path = self._paths(rec_id)
+            try:
+                meta = json.loads(open(meta_path, "rb").read())
+            except (OSError, ValueError) as e:
+                raise WalCorruptError(f"WAL record {rec_id}: bad sidecar: {e}") from e
+            delta_p = None
+            if meta["parts_before"] < table.num_partitions:
+                continue  # applied before the crash
+            if meta["parts_before"] > table.num_partitions:
+                raise WalCorruptError(
+                    f"WAL record {rec_id} expects {meta['parts_before']} "
+                    f"partitions but the table has {table.num_partitions}: "
+                    "a preceding record is missing"
+                )
+            payload = _read_verified(
+                npz_path, meta["sha256"], f"WAL record {rec_id}"
+            )
+            with np.load(io.BytesIO(payload)) as z:
+                delta_p = {k: z[k] for k in z.files}
+            append_partitions(table, delta_p)
+            applied += 1
+        return applied
+
+    def truncate(self) -> None:
+        """Drop every record (call after a snapshot makes them redundant)."""
+        for rec_id in self._record_ids():
+            for path in self._paths(rec_id):
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+
+
+# --------------------------------------------------------------------------
+# snapshots of the session (table + all derived state)
+# --------------------------------------------------------------------------
+def save_snapshot(session, directory: str,
+                  injector: FaultInjector | None = None) -> str:
+    """Persist the session's table AND derived state; → manifest path.
+
+    The manifest is written last: a directory without one is an
+    incomplete snapshot and `restore_snapshot` refuses it."""
+    os.makedirs(directory, exist_ok=True)
+    crash_point(injector, "snapshot.begin")
+    table = session.table
+    files: dict[str, str] = {}
+
+    table_bytes = _npz_bytes(dict(table.columns))
+    _write_atomic(os.path.join(directory, "table.npz"), table_bytes)
+    files["table.npz"] = _sha256(table_bytes)
+
+    # force every store current before serializing (lazy syncs flush here)
+    sketches = session.sketches.sketches()
+    session.views.refresh()
+    picker_state = None
+    if session.picker is not None:
+        picker_state = {
+            "funnel": session.picker.funnel,
+            "cluster_mask": session.picker.cluster_mask,
+            "config": session.picker.config,
+        }
+    derived = {
+        "sketches": sketches,
+        "views": session.views._views,
+        "answers_cache": session.answers._cache,
+        "answers_partial": session.answers._partial,
+        "picker": picker_state,
+        "planner_config": session.planner_config,
+    }
+    derived_bytes = pickle.dumps(derived, protocol=pickle.HIGHEST_PROTOCOL)
+    crash_point(injector, "snapshot.files")
+    _write_atomic(os.path.join(directory, "derived.pkl"), derived_bytes)
+    files["derived.pkl"] = _sha256(derived_bytes)
+
+    meta = {
+        "format": _FORMAT,
+        "name": table.name,
+        "version": table.version,
+        "append_log": {str(k): v for k, v in table.append_log.items()},
+        "num_partitions": table.num_partitions,
+        "schema": [dataclasses.asdict(s) for s in table.schema],
+    }
+    meta_bytes = json.dumps(meta).encode()
+    _write_atomic(os.path.join(directory, "meta.json"), meta_bytes)
+    files["meta.json"] = _sha256(meta_bytes)
+
+    manifest = {"format": _FORMAT, "files": files}
+    manifest_path = os.path.join(directory, "manifest.json")
+    _write_atomic(manifest_path, json.dumps(manifest).encode())
+    crash_point(injector, "snapshot.done")
+    return manifest_path
+
+
+def load_table(directory: str) -> Table:
+    """Rebuild the `Table` a snapshot holds, verifying every checksum."""
+    manifest_path = os.path.join(directory, "manifest.json")
+    if not os.path.exists(manifest_path):
+        raise WalCorruptError(
+            f"no manifest in {directory!r}: snapshot incomplete or missing"
+        )
+    manifest = json.loads(open(manifest_path, "rb").read())
+    if manifest.get("format") != _FORMAT:
+        raise WalCorruptError(
+            f"snapshot format {manifest.get('format')!r} != {_FORMAT}"
+        )
+    files = manifest["files"]
+    meta = json.loads(
+        _read_verified(os.path.join(directory, "meta.json"),
+                       files["meta.json"], "snapshot meta")
+    )
+    table_bytes = _read_verified(
+        os.path.join(directory, "table.npz"), files["table.npz"],
+        "snapshot table"
+    )
+    with np.load(io.BytesIO(table_bytes)) as z:
+        columns = {k: z[k] for k in z.files}
+    schema = tuple(ColumnSpec(**s) for s in meta["schema"])
+    return Table(
+        schema, columns, name=meta["name"], version=meta["version"],
+        append_log={int(k): v for k, v in meta["append_log"].items()},
+    )
+
+
+def _load_derived(directory: str) -> dict:
+    manifest = json.loads(
+        open(os.path.join(directory, "manifest.json"), "rb").read()
+    )
+    derived_bytes = _read_verified(
+        os.path.join(directory, "derived.pkl"),
+        manifest["files"]["derived.pkl"], "snapshot derived state"
+    )
+    return pickle.loads(derived_bytes)
+
+
+def restore_snapshot(cls, directory: str, *, options=None,
+                     planner_config=None):
+    """Rebuild a `Session` (class passed in to avoid an import cycle)
+    from `save_snapshot`'s output, grafting the derived state back in.
+
+    Device-resident stacks are NOT in the snapshot: they rebuild lazily
+    (and deterministically) from the restored host columns, so the same
+    snapshot restores bit-identically under any mesh."""
+    table = load_table(directory)
+    derived = _load_derived(directory)
+    planner_config = planner_config or derived.get("planner_config")
+    sess = cls(table, options=options, planner_config=planner_config)
+
+    sketches = derived["sketches"]
+    if sketches.num_partitions != table.num_partitions:
+        raise StaleStateError(
+            f"snapshot sketches cover {sketches.num_partitions} partitions "
+            f"but the restored table has {table.num_partitions}"
+        )
+    sess.sketches._sk = sketches
+    sess.sketches._version = table.version
+    sess.views._views = derived["views"]
+    sess.views._version = table.version
+    sess.answers._cache = derived["answers_cache"]
+    sess.answers._partial = derived["answers_partial"]
+    sess.answers._version = table.version
+
+    picker_state = derived.get("picker")
+    if picker_state is not None:
+        from repro.core.features import FeatureBuilder
+        from repro.core.picker import PS3Picker
+        from repro.planner import QueryPlanner
+
+        fb = FeatureBuilder(table, sess.sketches.sketches())
+        sess.picker = PS3Picker(
+            table, fb, picker_state["funnel"], picker_state["cluster_mask"],
+            picker_state["config"],
+        )
+        sess.planner = QueryPlanner(
+            sess.picker, sess.answers, views=sess.views,
+            config=sess.planner_config,
+        )
+        sess._fb_version = table.version
+    return sess
+
+
+def recover(directory: str, *, options=None, planner_config=None):
+    """Full crash recovery: restore ``<dir>/snapshot`` and replay
+    ``<dir>/wal`` into the restored table; → the recovered `Session`.
+
+    Derived state syncs lazily through the table's append log exactly as
+    it would have for live appends — the recovered session is
+    bit-identical to one that never crashed (tested in
+    ``tests/test_wal.py`` on 1/2/8-device meshes)."""
+    from repro.api import Session
+
+    sess = restore_snapshot(
+        Session, os.path.join(directory, "snapshot"),
+        options=options, planner_config=planner_config,
+    )
+    log = WriteAheadLog(os.path.join(directory, "wal"))
+    log.replay(sess.table)
+    return sess

@@ -1,0 +1,385 @@
+"""Fault-injection harness + degraded-answer read path (ISSUE 8).
+
+The contract under test: with a seeded `FaultPolicy` threaded through
+`ExecOptions(faults=...)`, every partition-read outcome is a pure
+function of the seed (a red chaos run reproduces locally), the planner
+masks irrecoverable reads inside its padded chunk shapes (census-flat —
+failures never mint a new compile), re-expands the SRSWOR weights over
+the surviving sample and reports ``degraded``/``partitions_failed``
+instead of raising, exact-read paths raise a typed `PartitionReadError`,
+and an unachievable error bound stops at the full readable table with
+``degraded=True`` (or `BudgetExhaustedError` under ``strict=True``).
+
+CI runs this file in the seeded chaos lane on the forced 8-device mesh
+(``-m chaos`` with ``CHAOS_SEED``); all schedules derive from the seed.
+"""
+import os
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.backends import ExecOptions
+from repro.core.picker import PickerConfig, train_picker
+from repro.data.datasets import make_dataset
+from repro.errors import (
+    BudgetExhaustedError,
+    InjectedCrash,
+    PartitionReadError,
+)
+from repro.faults import FaultInjector, FaultPolicy, crash_point, injector_for
+from repro.planner import QueryPlanner
+from repro.queries import device
+from repro.queries.engine import AnswerStore, per_partition_answers
+from repro.queries.generator import WorkloadSpec
+
+pytestmark = pytest.mark.chaos
+
+SEED = int(os.environ.get("CHAOS_SEED", "20240807"))
+HOST = ExecOptions(backend="host")
+PLANES = (None, 2, 8)
+TINY_PICKER = PickerConfig(num_trees=8, tree_depth=3, feature_selection=False)
+
+# dead-heavy policy: guarantees permanent failures for the accounting /
+# strict-mode / census tests (~5% of partitions lose every replica)
+CHAOS = FaultPolicy(seed=SEED, dead_frac=0.05, fail_frac=0.05,
+                    timeout_frac=0.02, straggler_frac=0.05)
+# the coverage-gate policy: "5% of reads fail" = 5% per-attempt transient
+# failure rate (retries + same-stratum replacement recover), with
+# all-replica partition loss an order rarer.  A dead-heavy policy cannot
+# gate coverage: a group whose only holder partitions are dead is
+# irrecoverable by ANY read strategy and scores 1.0 in the metric.
+GATE = FaultPolicy(seed=SEED, dead_frac=0.0125, fail_frac=0.05,
+                   timeout_frac=0.02, straggler_frac=0.05)
+
+
+def _plane_or_skip(plane):
+    if plane is not None and plane > len(jax.devices()):
+        pytest.skip(f"needs {plane} devices, have {len(jax.devices())} "
+                    "(CI sets XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    return plane
+
+
+def _rel_err(keys_e, est, keys_t, truth) -> float:
+    if keys_t.size == 0:
+        return 0.0
+    lut = {int(k): i for i, k in enumerate(keys_e)}
+    tot, cnt = 0.0, 0
+    for gi, k in enumerate(keys_t):
+        i = lut.get(int(k))
+        for j in range(truth.shape[1]):
+            t = truth[gi, j]
+            if np.isnan(t):
+                continue
+            if i is None or np.isnan(est[i, j]):
+                tot += 1.0
+            else:
+                tot += min(abs(est[i, j] - t) / max(abs(t), 1e-12), 1.0)
+            cnt += 1
+    return tot / max(cnt, 1)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    table = make_dataset("tpch", num_partitions=48, rows_per_partition=96)
+    art = train_picker(table, WorkloadSpec(table, seed=0),
+                       num_train_queries=24, config=TINY_PICKER, options=HOST)
+    queries = WorkloadSpec(table, seed=123).sample_workload(10)
+    truth = {q.describe(): per_partition_answers(table, q, options=HOST)
+             for q in queries}
+    return SimpleNamespace(table=table, art=art, queries=queries, truth=truth)
+
+
+def _planner(ctx, options):
+    return QueryPlanner(ctx.art.picker, AnswerStore(ctx.table, options=options))
+
+
+# --------------------------------------------------------------------------
+# the injector: deterministic schedules, retries, hedging, virtual time
+# --------------------------------------------------------------------------
+def test_schedule_is_pure_function_of_seed():
+    ids = np.arange(64)
+    runs = []
+    for _ in range(2):
+        inj = FaultInjector(CHAOS)
+        ok1, bad1 = inj.read_ids(ids)
+        ok2, bad2 = inj.read_ids(ids)  # second round re-rolls transients
+        runs.append((ok1.tolist(), bad1.tolist(), ok2.tolist(), bad2.tolist(),
+                     inj.report()))
+    assert runs[0] == runs[1], "same seed must reproduce the same schedule"
+    # a different seed produces a different schedule: compare the stable
+    # dead sets at 50% over 512 partitions (identical only if the hash
+    # mix degenerates)
+    a = FaultInjector(FaultPolicy(seed=SEED, dead_frac=0.5))
+    b = FaultInjector(FaultPolicy(seed=SEED + 1, dead_frac=0.5))
+    assert [a.is_dead(p) for p in range(512)] != [b.is_dead(p) for p in range(512)]
+
+
+def test_dead_partitions_are_stable_and_fail_permanently():
+    inj = FaultInjector(FaultPolicy(seed=SEED, dead_frac=0.3))
+    dead = [p for p in range(100) if inj.is_dead(p)]
+    assert 10 <= len(dead) <= 60  # ~30 of 100
+    assert dead == [p for p in range(100) if inj.is_dead(p)]  # stable
+    survivors, failed = inj.read_ids(np.arange(100))
+    assert failed.tolist() == dead  # dead ⇔ permanently failed
+    assert survivors.size + failed.size == 100
+    # every dead read burned the full retry budget
+    assert inj.retries >= len(dead) * (inj.policy.max_attempts - 1)
+
+
+def test_transient_failures_recover_via_retry():
+    # fail_frac below 1: with 3 attempts most reads eventually succeed
+    inj = FaultInjector(FaultPolicy(seed=SEED, fail_frac=0.3, max_attempts=4))
+    survivors, failed = inj.read_ids(np.arange(200))
+    assert survivors.size > 180  # 0.3^4 ≈ 0.8% permanent
+    assert inj.retries > 0 and inj.transient_failures > 0
+    assert inj.virtual_seconds > 0
+
+
+def test_straggler_hedging_wins_and_costs_less():
+    p = FaultPolicy(seed=SEED, straggler_frac=1.0, hedge_after=0.05,
+                    straggler_delay=1.0)
+    inj = FaultInjector(p)
+    survivors, failed = inj.read_ids(np.arange(32))
+    assert failed.size == 0  # stragglers always complete
+    assert inj.hedges == 32
+    assert inj.hedge_wins > 0
+    # an unhedged policy (hedge_after >= straggler_delay) waits out every
+    # straggler: strictly more virtual time, zero hedges
+    slow = FaultInjector(FaultPolicy(seed=SEED, straggler_frac=1.0,
+                                     hedge_after=1.0, straggler_delay=1.0))
+    slow.read_ids(np.arange(32))
+    assert slow.hedges == 0
+    assert slow.virtual_seconds >= inj.virtual_seconds
+
+
+def test_timeouts_cost_chunk_timeout_per_attempt():
+    p = FaultPolicy(seed=SEED, timeout_frac=1.0, max_attempts=2,
+                    chunk_timeout=0.25, backoff_base=0.0)
+    inj = FaultInjector(p)
+    survivors, failed = inj.read_ids(np.arange(4))
+    assert survivors.size == 0
+    assert inj.timeouts == 8  # 4 ids x 2 attempts
+    assert inj.virtual_seconds == pytest.approx(0.5)  # max over parallel ids
+
+
+def test_read_ids_strict_raises_typed_error():
+    inj = FaultInjector(FaultPolicy(seed=SEED, dead_frac=0.5))
+    with pytest.raises(PartitionReadError) as ei:
+        inj.read_ids_strict(np.arange(40), "test")
+    assert ei.value.failed_ids  # carries the unreadable partitions
+    assert ei.value.report["permanent_failures"] == len(ei.value.failed_ids)
+
+
+def test_policy_validation_and_injector_for():
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        FaultPolicy(dead_frac=1.5)
+    with pytest.raises(ValueError, match="max_attempts"):
+        FaultPolicy(max_attempts=0)
+    assert injector_for(HOST) is None
+    assert injector_for(HOST.replace(faults=CHAOS)).policy is CHAOS
+    with pytest.raises(TypeError, match="FaultPolicy"):
+        injector_for(HOST.replace(faults="nope"))
+
+
+def test_crash_points_fire_once():
+    inj = FaultInjector(FaultPolicy(seed=SEED).with_crash("p"))
+    crash_point(None, "p")  # no injector: no-op
+    inj.crash("other")  # unarmed point: no-op
+    with pytest.raises(InjectedCrash) as ei:
+        inj.crash("p")
+    assert ei.value.point == "p"
+    inj.crash("p")  # one-shot: recovery re-runs must pass
+    assert inj.crashes == 1
+    assert not issubclass(InjectedCrash, Exception)  # un-swallowable
+
+
+# --------------------------------------------------------------------------
+# the planner under faults: degraded answers, weights, accounting
+# --------------------------------------------------------------------------
+def test_degraded_answers_hold_coverage(ctx):
+    """ISSUE-8 acceptance: with ~5% of reads failing, answers at the 5%
+    bound keep >= 0.9 empirical coverage and report degraded exactly."""
+    planner = _planner(ctx, HOST.replace(faults=GATE))
+    bound, hits, any_failed = 0.05, 0, 0
+    for q in ctx.queries:
+        pa = planner.answer(q, error_bound=bound)
+        ta = ctx.truth[q.describe()]
+        err = _rel_err(pa.group_keys, pa.estimate, ta.group_keys, ta.truth())
+        hits += err <= bound
+        any_failed += pa.plan.partitions_failed
+        if pa.plan.partitions_failed:
+            assert pa.plan.degraded
+            assert len(pa.plan.failed_ids) == pa.plan.partitions_failed
+            assert pa.plan.read_report["permanent_failures"] > 0
+            assert pa.plan.mode != "exact"
+    assert any_failed > 0, "chaos policy injected no failures"
+    assert hits / len(ctx.queries) >= 0.9, f"{hits}/{len(ctx.queries)}"
+
+
+def test_fault_free_plans_report_clean(ctx):
+    planner = _planner(ctx, HOST)
+    pa = planner.answer(ctx.queries[0], error_bound=0.05)
+    assert not pa.plan.degraded
+    assert pa.plan.partitions_failed == 0
+    assert pa.plan.failed_ids == ()
+    assert pa.plan.read_report == {}
+
+
+def test_strict_mode_raises_on_failures(ctx):
+    planner = _planner(ctx, HOST.replace(faults=CHAOS))
+    raised = 0
+    for q in ctx.queries:
+        try:
+            pa = planner.answer(q, error_bound=0.05, strict=True)
+            assert pa.plan.partitions_failed == 0  # strict only passes clean
+        except (PartitionReadError, BudgetExhaustedError):
+            raised += 1
+    assert raised > 0, "chaos policy never tripped strict mode"
+
+
+def test_unachievable_bound_stops_at_full_read(ctx):
+    """Satellite: an unachievable bound (dead partitions keep part of the
+    table dark) escalates to every readable candidate, stops, and returns
+    degraded=True; strict=True raises BudgetExhaustedError instead."""
+    dead = FaultPolicy(seed=SEED, dead_frac=0.25)
+    planner = _planner(ctx, HOST.replace(faults=dead))
+    q = next(q for q in ctx.queries if q.groupby)
+    pa = planner.answer(q, error_bound=1e-6)
+    assert pa.plan.degraded
+    assert pa.plan.partitions_failed > 0
+    assert pa.partitions_read <= pa.plan.candidates
+    # escalation attempted the whole readable inlier population
+    assert pa.plan.schedule[-1] == sum(pa.plan.strata_sizes)
+    with pytest.raises(BudgetExhaustedError) as ei:
+        _planner(ctx, HOST.replace(faults=dead)).answer(
+            q, error_bound=1e-6, strict=True
+        )
+    assert ei.value.predicted_error > 1e-6
+    assert ei.value.partitions_read > 0
+
+
+def test_replacement_substitution_reads_same_stratum(ctx):
+    """Failed reads are substituted from the same stratum: the attempted
+    prefix grows past the allocation, so surviving reads stay near the
+    fault-free read count instead of shrinking with the failure rate."""
+    clean = _planner(ctx, HOST)
+    faulty = _planner(ctx, HOST.replace(faults=FaultPolicy(seed=SEED,
+                                                           dead_frac=0.15)))
+    q = next(q for q in ctx.queries if q.groupby)
+    pa_c = clean.answer(q, error_bound=0.05)
+    pa_f = faulty.answer(q, error_bound=0.05)
+    assert pa_f.plan.partitions_failed > 0
+    # survivors (partitions_read) must not collapse: substitution refills
+    assert pa_f.partitions_read >= int(0.7 * pa_c.partitions_read)
+
+
+def test_degraded_ci_widens_vs_clean(ctx):
+    """Losing reads must not shrink the reported uncertainty: a degraded
+    COUNT/SUM answer never claims an exact (zero-width) interval — the
+    failed-read bias bound widens every present group — and over the
+    groups both runs report, the degraded intervals are no tighter than
+    the fault-free ones."""
+    q = next(q for q in ctx.queries if q.groupby)
+    clean = _planner(ctx, HOST).answer(q, budget=24)
+    faulty = _planner(ctx, HOST.replace(
+        faults=FaultPolicy(seed=SEED, dead_frac=0.3))).answer(q, budget=24)
+    assert faulty.plan.partitions_failed > 0
+    present = ~np.isnan(faulty.estimate[:, 0])
+    assert present.any()
+    assert np.all(faulty.ci_halfwidth[present, 0] > 0), \
+        "degraded answer claimed an exact interval over unreadable mass"
+    common = np.intersect1d(clean.group_keys, faulty.group_keys)
+    ic = np.searchsorted(clean.group_keys, common)
+    jf = np.searchsorted(faulty.group_keys, common)
+    assert float(np.nansum(faulty.ci_halfwidth[jf, 0])) >= \
+        float(np.nansum(clean.ci_halfwidth[ic, 0]))
+
+
+# --------------------------------------------------------------------------
+# exact-read paths: typed errors instead of silent degradation
+# --------------------------------------------------------------------------
+def test_answer_store_exact_reads_raise(ctx):
+    store = AnswerStore(ctx.table, options=HOST.replace(
+        faults=FaultPolicy(seed=SEED, dead_frac=0.3)))
+    with pytest.raises(PartitionReadError, match="AnswerStore.get"):
+        store.get(ctx.queries[0])
+    with pytest.raises(PartitionReadError, match="AnswerStore.get_batch"):
+        store.get_batch(list(ctx.queries[:2]))
+
+
+def test_answer_store_fault_free_unaffected(ctx):
+    faulty = AnswerStore(ctx.table, options=HOST.replace(faults=FaultPolicy(
+        seed=SEED, straggler_frac=0.2)))  # stragglers always succeed
+    clean = AnswerStore(ctx.table, options=HOST)
+    q = ctx.queries[0]
+    a, b = faulty.get(q), clean.get(q)
+    assert a.raw.tobytes() == b.raw.tobytes()
+    assert faulty.injector.stragglers > 0
+
+
+# --------------------------------------------------------------------------
+# census-flat compile behavior under faults (device backend, meshes)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("plane", PLANES, ids=["single", "mesh2", "mesh8"])
+def test_census_flat_under_faults(ctx, plane):
+    """Failed partitions are masked inside the existing padded chunk
+    shapes: a fault-injected escalation compiles no more programs than
+    the fault-free chunk census allows — on every mesh."""
+    _plane_or_skip(plane)
+    from repro.data.table import Table
+    from repro.planner import PlannerConfig
+
+    opts = ExecOptions(backend="device", mesh=plane, faults=CHAOS)
+    planner = _planner(ctx, opts)
+    chunk = PlannerConfig().chunk
+    sub = Table(ctx.table.schema,
+                {k: v[:chunk] for k, v in ctx.table.columns.items()},
+                name=f"{ctx.table.name}/censusprobe")
+    probes = [q for q in ctx.queries if q.groupby][:3]
+    expected = set()
+    for q in probes:
+        expected |= device.workload_census(sub, [q])
+    device.TRACES.reset()
+    failed = 0
+    for q in probes:
+        for bound in (0.10, 0.05, 1e-6):  # incl. capped escalation to full
+            pa = planner.answer(q, error_bound=bound)
+            failed += pa.plan.partitions_failed
+    compiles = device.TRACES.total()
+    assert compiles <= len(expected), (compiles, len(expected))
+    assert failed > 0, "chaos policy injected no failures on this plane"
+
+
+# --------------------------------------------------------------------------
+# Session plumbing
+# --------------------------------------------------------------------------
+def test_session_threads_faults_and_reports(ctx):
+    sess = api.Session(ctx.table, options=HOST.replace(faults=CHAOS))
+    sess.picker = ctx.art.picker
+    sess.planner = QueryPlanner(sess.picker, sess.answers, views=sess.views,
+                                config=sess.planner_config)
+    sess._fb_version = ctx.table.version
+    degraded = 0
+    for q in ctx.queries[:5]:
+        ans = sess.execute(api.QuerySpec(q, error_bound=0.05))
+        degraded += int(ans.plan.degraded)
+    st = sess.stats()
+    assert st["degraded_answers"] == degraded
+    assert st["fault_report"]["reads"] > 0
+    assert st["partitions_failed"] >= 0
+
+
+def test_spec_strict_propagates(ctx):
+    sess = api.Session(ctx.table,
+                       options=HOST.replace(faults=FaultPolicy(
+                           seed=SEED, dead_frac=0.4)))
+    sess.picker = ctx.art.picker
+    sess.planner = QueryPlanner(sess.picker, sess.answers, views=sess.views,
+                                config=sess.planner_config)
+    sess._fb_version = ctx.table.version
+    q = next(q for q in ctx.queries if q.groupby)
+    with pytest.raises((PartitionReadError, BudgetExhaustedError)):
+        sess.execute(api.QuerySpec(q, error_bound=0.05, strict=True))
