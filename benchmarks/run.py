@@ -29,6 +29,7 @@ MODULES = [
     "bench_streaming",
     "bench_planner",
     "bench_faults",
+    "bench_serving_load",
     "fig3_macro",
     "fig4_lesion",
     "fig5_feature_importance",

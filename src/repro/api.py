@@ -37,15 +37,17 @@ from repro.backends import UNSET, ExecOptions, exec_options  # noqa: F401  (re-e
 from repro.core.features import FeatureBuilder
 from repro.errors import (  # noqa: F401  (re-export)
     BudgetExhaustedError,
+    DeadlineExceededError,
     InjectedCrash,
     InvalidQueryError,
+    OverloadError,
     PartitionReadError,
     ReproError,
     SessionStateError,
     StaleStateError,
     WalCorruptError,
 )
-from repro.faults import FaultPolicy  # noqa: F401  (re-export)
+from repro.faults import FaultPolicy, VirtualClock  # noqa: F401  (re-export)
 from repro.core.picker import PickerConfig, train_picker
 from repro.core.sketches import SketchStore
 from repro.data.table import Table
@@ -58,10 +60,12 @@ __all__ = [
     "Aggregate",
     "BudgetExhaustedError",
     "Clause",
+    "DeadlineExceededError",
     "ExecOptions",
     "FaultPolicy",
     "InjectedCrash",
     "InvalidQueryError",
+    "OverloadError",
     "PartitionReadError",
     "Predicate",
     "Query",
@@ -70,6 +74,7 @@ __all__ = [
     "Session",
     "SessionStateError",
     "StaleStateError",
+    "VirtualClock",
     "WalCorruptError",
 ]
 
@@ -118,6 +123,11 @@ class Session:
     delta-maintained views).
     """
 
+    # bound on the per-(backend, chunk) read-rate EMA map: mixed traffic
+    # that sweeps options/planner_config would otherwise grow it without
+    # limit in a long-lived serve process (LRU: oldest key evicted)
+    MAX_RATE_KEYS = 16
+
     def __init__(
         self,
         table: Table,
@@ -125,12 +135,19 @@ class Session:
         options: ExecOptions | None = None,
         planner_config: PlannerConfig | None = None,
         answer_capacity: int = 256,
+        answer_ttl: float | None = None,
+        clock=None,
     ):
         self.table = table
         self.options = options if options is not None else ExecOptions()
         self.sketches = SketchStore(table, options=self.options)
+        # answer_ttl (seconds on `clock`, default time.monotonic) bounds
+        # how long cached answers may serve before being recomputed — a
+        # long-lived serve process must not pin stale-but-valid answers
+        # forever.  Expiries are counted in stats()["answer_ttl_expired"].
         self.answers = AnswerStore(
-            table, capacity=answer_capacity, options=self.options
+            table, capacity=answer_capacity, options=self.options,
+            ttl=answer_ttl, clock=clock,
         )
         self.views = ViewStore(table, options=self.options)
         self.planner_config = planner_config or PlannerConfig()
@@ -203,29 +220,49 @@ class Session:
             return self.planner_config.chunk
         return max(1, int(rate * seconds))
 
-    def execute(self, spec: QuerySpec | Query) -> PlannedAnswer:
+    def execute(
+        self,
+        spec: QuerySpec | Query,
+        *,
+        deadline: float | None = None,
+        clock=None,
+        budget_cap: int | None = None,
+    ) -> PlannedAnswer:
+        """Answer one spec.  The keyword-only serving hooks pass straight
+        through to the planner: ``deadline`` (absolute instant on
+        ``clock``; strict specs raise `DeadlineExceededError` when it
+        expires with the bound unmet, non-strict ones return the best
+        answer so far with ``plan.deadline_hit``) and ``budget_cap`` (hard
+        clamp on escalation — the front door's brownout control)."""
         if isinstance(spec, Query):
             spec = QuerySpec(spec, error_bound=0.05)
         planner = self._require_planner()
+        hooks = dict(deadline=deadline, clock=clock, budget_cap=budget_cap)
         t0 = time.perf_counter()
         if spec.latency_bound is not None:
             ans = planner.answer(
                 spec.query,
                 budget=self._budget_for_latency(spec.latency_bound),
                 strict=spec.strict,
+                **hooks,
             )
         elif spec.budget is not None:
-            ans = planner.answer(spec.query, budget=spec.budget, strict=spec.strict)
+            ans = planner.answer(
+                spec.query, budget=spec.budget, strict=spec.strict, **hooks
+            )
         else:
             ans = planner.answer(
-                spec.query, error_bound=spec.error_bound, strict=spec.strict
+                spec.query, error_bound=spec.error_bound, strict=spec.strict,
+                **hooks,
             )
         dt = max(time.perf_counter() - t0, 1e-6)
         if ans.partitions_read:
             rate = ans.partitions_read / dt
             key = self._rate_key()
-            old = self._rates.get(key)
+            old = self._rates.pop(key, None)  # pop+reinsert: LRU recency
             self._rates[key] = rate if old is None else 0.7 * old + 0.3 * rate
+            while len(self._rates) > self.MAX_RATE_KEYS:
+                del self._rates[next(iter(self._rates))]
         self._executed += 1
         if ans.plan.degraded:
             self._degraded += 1
@@ -269,6 +306,8 @@ class Session:
             "chunk_evals": 0 if planner is None else planner.chunk_evals,
             "read_rate_ema": self._rates.get(self._rate_key()),
             "read_rate_emas": dict(self._rates),
+            "ema_keys": len(self._rates),
+            "answer_ttl_expired": self.answers.ttl_expired,
             "num_partitions": self.table.num_partitions,
             "degraded_answers": self._degraded,
             "partitions_failed": self._partitions_failed,

@@ -79,6 +79,44 @@ class BudgetExhaustedError(ReproError):
         self.partitions_read = partitions_read
 
 
+class DeadlineExceededError(BudgetExhaustedError):
+    """A request deadline expired before its error bound was met.
+
+    In the `BudgetExhaustedError` family on purpose: a deadline is a
+    budget denominated in seconds, and strict-mode callers that already
+    catch budget exhaustion handle deadline expiry the same way.  Raised
+    under ``strict=True`` (the planner's between-round deadline check,
+    or the serving front door shedding an expired-in-queue request); the
+    non-strict contract returns the best answer produced so far with
+    ``plan.degraded``/``plan.deadline_hit`` set instead.
+    """
+
+
+class OverloadError(ReproError):
+    """The serving front door refused a request to protect the system.
+
+    ``reason`` routes the caller's response:
+
+      * ``"rate_limited"`` — the tenant's token bucket is empty; retry
+        after ``retry_after`` seconds without backing off other work.
+      * ``"tenant_queue_full"`` — the tenant's bulkhead queue cap is hit
+        (its own backlog, not system overload).
+      * ``"shed"`` — the global queue is full with the brownout ladder
+        exhausted; the system is overloaded and callers should back off
+        for ``retry_after`` seconds.
+      * ``"deadline"`` — the request expired while still queued and was
+        shed before any partition read (non-strict requests; strict ones
+        get `DeadlineExceededError`).
+    """
+
+    def __init__(self, message: str, *, reason: str = "shed",
+                 retry_after: float = 0.0, tenant: str | None = None):
+        super().__init__(message)
+        self.reason = reason
+        self.retry_after = float(retry_after)
+        self.tenant = tenant
+
+
 class WalError(ReproError):
     """Write-ahead-log / snapshot failure (I/O layer)."""
 

@@ -47,6 +47,37 @@ from repro.core.sketches import hash_u64
 from repro.errors import InjectedCrash, PartitionReadError
 
 
+class VirtualClock:
+    """Deterministic monotonic clock for chaos and serving tests.
+
+    Nothing sleeps: time advances only when a component declares that
+    work *would* have taken that long — `FaultInjector.read_ids` adds its
+    virtual chunk latency when given a clock, and the serving front
+    door's virtual mode adds its modeled service time per flush.  Pass
+    ``clock.now`` wherever a ``clock: Callable[[], float]`` is accepted
+    (planner deadlines, front-door admission), and every deadline /
+    rate-limit / latency-percentile assertion becomes a pure function of
+    the schedule instead of the CI machine's scheduler.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"VirtualClock.advance needs dt >= 0, got {dt}")
+        self._now += dt
+        return self._now
+
+    def advance_to(self, t: float) -> float:
+        """Move forward to ``t`` (monotonic: never backwards)."""
+        self._now = max(self._now, float(t))
+        return self._now
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultPolicy:
     """Deterministic fault schedule + retry/hedge policy, in one value.
@@ -111,8 +142,12 @@ class FaultInjector:
     is still a pure function of (seed, call order).
     """
 
-    def __init__(self, policy: FaultPolicy):
+    def __init__(self, policy: FaultPolicy, clock: VirtualClock | None = None):
         self.policy = policy
+        # optional shared virtual clock: when set, read_ids advances it by
+        # the chunk's virtual completion time, so deadlines measured on
+        # the same clock see the cost of slow/faulty reads (test plane)
+        self.clock = clock
         self._tick = 0
         self._fired: set[str] = set()
         self.reads = 0
@@ -203,6 +238,8 @@ class FaultInjector:
             t_max = max(t_max, t)
         self.permanent_failures += int((~ok).sum())
         self.virtual_seconds += t_max
+        if self.clock is not None:
+            self.clock.advance(t_max)
         return ids[ok], ids[~ok]
 
     def read_ids_strict(self, ids, where: str) -> np.ndarray:

@@ -34,13 +34,19 @@ partitions_read, plan)`` so accuracy and cost claims are auditable —
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro import faults
 from repro.core.funnel import allocate
 from repro.core.outliers import find_outliers
-from repro.errors import BudgetExhaustedError, InvalidQueryError, PartitionReadError
+from repro.errors import (
+    BudgetExhaustedError,
+    DeadlineExceededError,
+    InvalidQueryError,
+    PartitionReadError,
+)
 from repro.planner.variance import StratifiedEstimate, prior_budget, stratified_answer
 from repro.queries.engine import (
     AnswerStore,
@@ -85,6 +91,9 @@ class QueryPlan:
     partitions_failed: int = 0
     failed_ids: tuple[int, ...] = ()
     read_report: dict = dataclasses.field(default_factory=dict)
+    # serving plane: escalation stopped by a wall-clock deadline (the
+    # answer is the best estimate produced before it expired)
+    deadline_hit: bool = False
 
 
 @dataclasses.dataclass
@@ -175,9 +184,40 @@ class QueryPlanner:
         error_bound: float | None = None,
         budget: int | None = None,
         strict: bool = False,
+        *,
+        budget_cap: int | None = None,
+        deadline: float | None = None,
+        clock=None,
     ) -> PlannedAnswer:
+        """``budget_cap``/``deadline``/``clock`` are the serving hooks:
+
+        * ``budget_cap`` clamps how far escalation may grow, whatever the
+          error bound asks for (the brownout controller shrinks it in
+          steps under load);
+        * ``deadline`` is an absolute instant on ``clock`` (defaults to
+          ``time.monotonic``; serving/chaos tests pass a
+          `faults.VirtualClock` shared with the injector).  Escalation
+          checks it between rounds: strict requests whose bound is still
+          unmet raise `DeadlineExceededError`, non-strict ones return the
+          best answer produced so far with ``plan.deadline_hit`` /
+          ``plan.degraded`` set and the honest (wider) interval.
+        """
         if (error_bound is None) == (budget is None):
             raise InvalidQueryError("pass exactly one of error_bound= / budget=")
+        if budget_cap is not None and budget_cap < 1:
+            raise InvalidQueryError(f"budget_cap must be >= 1, got {budget_cap}")
+        if deadline is not None and clock is None:
+            clock = time.monotonic
+        if deadline is not None and strict and clock() >= deadline:
+            # expired before any read: shed the whole plan, zero cost
+            raise DeadlineExceededError(
+                f"deadline expired {clock() - deadline:.3f}s before "
+                "planning began",
+                predicted_error=None,
+                partitions_read=0,
+            )
+        if budget is not None and budget_cap is not None:
+            budget = min(int(budget), int(budget_cap))
         cfg = self.config
         plans, n_raw = plan_aggregates(query.aggregates)
         n_aggs = len(plans)
@@ -254,6 +294,12 @@ class QueryPlanner:
                 outlier_ids = np.union1d(outlier_ids, subs)
                 state = self._read(query, subs, state, failed)
         inliers = np.setdiff1d(candidates, outlier_ids)
+        # brownout clamp: escalation may never grow past `limit` sampled
+        # partitions, however far the bound would like to go.  Floor of 2
+        # keeps sample variances defined (matching total0 below).
+        limit = int(inliers.size)
+        if budget_cap is not None:
+            limit = min(limit, max(2, int(budget_cap) - int(outlier_ids.size)))
         strata = self.funnel.classify(feats, inliers)
         strata = [s for s in strata if s.size]
         if not strata:
@@ -262,7 +308,7 @@ class QueryPlanner:
         rng = np.random.default_rng(cfg.seed)
         perms = [s[rng.permutation(s.size)] for s in strata]
         total0 = max(0 if budget is not None else 2, rung0 - outlier_ids.size)
-        total0 = min(total0, inliers.size)
+        total0 = min(total0, limit)
         taken = [0] * len(strata)  # ATTEMPTED prefix per stratum (failed
         # ids stay counted — the pointer only advances, so escalation
         # terminates even when every remaining read fails)
@@ -271,6 +317,7 @@ class QueryPlanner:
         total = total0
         est: StratifiedEstimate | None = None
         scales = None
+        deadline_hit = False
         while True:
             alloc = self._allocate(sizes, total, scales)
             new_ids: list[int] = []
@@ -323,11 +370,16 @@ class QueryPlanner:
             )
             rounds_left -= 1
             done_all = all(t >= s for t, s in zip(taken, sizes))
+            if deadline is not None and clock() >= deadline:
+                # the answer in hand is the best one the deadline allows
+                deadline_hit = True
+                break
             if budget is not None or rounds_left <= 0:
                 break
-            if predicted <= cfg.safety * error_bound or done_all:
+            if (predicted <= cfg.safety * error_bound or done_all
+                    or sum(taken) >= limit):
                 break
-            total = int(min(np.ceil(total * cfg.growth), inliers.size))
+            total = int(min(np.ceil(total * cfg.growth), limit))
         partitions_read = int(outlier_read.size + n_survived)
         # degraded contract: failures survived into the answer, or the
         # error bound stayed unmet after escalating to every readable
@@ -335,7 +387,15 @@ class QueryPlanner:
         bound_unmet = (
             error_bound is not None and predicted > cfg.safety * error_bound
         )
-        degraded = bool(failed) or bound_unmet
+        degraded = bool(failed) or bound_unmet or deadline_hit
+        if strict and bound_unmet and deadline_hit:
+            raise DeadlineExceededError(
+                f"deadline expired with error bound {error_bound} unmet "
+                f"after {len(schedule)} round(s): predicted error "
+                f"{predicted:.4f} exceeds the stopping margin",
+                predicted_error=float(predicted),
+                partitions_read=int(outlier_read.size + n_survived),
+            )
         if strict and bound_unmet:
             # the stronger contract violation: even reading everything
             # readable could not meet the bound (unachievable bound, or
@@ -371,6 +431,7 @@ class QueryPlanner:
             partitions_failed=len(failed),
             failed_ids=tuple(sorted(failed)),
             read_report=self.injector.report() if self.injector else {},
+            deadline_hit=deadline_hit,
         )
         return PlannedAnswer(
             query, est.group_keys if mode != "hybrid" else self._cap_keys(est, caps),

@@ -28,6 +28,7 @@ planner-facing capabilities:
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -93,6 +94,10 @@ class ViewStore:
         }
         self.incremental_updates = 0
         self.full_rebuilds = 0
+        # serving front door: register/refresh/answer race between the
+        # flush loop and admission threads — serialize every path that
+        # reads or rewrites self._views / self._version
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
         return len(self._views)
@@ -116,17 +121,22 @@ class ViewStore:
             if col not in self._cards:
                 raise ValueError(f"view group-by on non-categorical column {col!r}")
         aggregates = tuple(aggregates)
-        self.refresh()
-        plans, _ = plan_aggregates(aggregates)
-        keys, totals = self._materialize(groupby, aggregates, self.table)
-        view = MaterializedView(groupby, aggregates, keys, totals, plans)
-        self._views.append(view)
-        return view
+        with self._lock:
+            self.refresh()
+            plans, _ = plan_aggregates(aggregates)
+            keys, totals = self._materialize(groupby, aggregates, self.table)
+            view = MaterializedView(groupby, aggregates, keys, totals, plans)
+            self._views.append(view)
+            return view
 
     def refresh(self) -> None:
         """Fold table growth into every view: O(delta) for pure appends
         (evaluate only the appended partitions, add the totals), full
         rebuild for anything else."""
+        with self._lock:
+            self._refresh_locked()
+
+    def _refresh_locked(self) -> None:
         if self.table.version == self._version or not self._views:
             self._version = self.table.version
             return
@@ -233,13 +243,14 @@ class ViewStore:
         """Exact ``(group_keys, estimate)`` when a view determines the
         query (group-by ⊆ view, predicate on view columns, aggregates
         covered); None otherwise.  Zero partitions read."""
-        self.refresh()
-        view = self._find(query, need_exact=True)
-        if view is None:
-            return None
-        keys, raw = self._rollup(view, query)
-        present = raw[:, 0] > 0
-        return keys[present], self._finalize(query, raw[present])
+        with self._lock:
+            self._refresh_locked()
+            view = self._find(query, need_exact=True)
+            if view is None:
+                return None
+            keys, raw = self._rollup(view, query)
+            present = raw[:, 0] > 0
+            return keys[present], self._finalize(query, raw[present])
 
     def upper_bounds(self, query: Query):
         """Per-group caps ``(q_keys, caps (Gq, n_aggs))`` for the clipping
@@ -247,7 +258,11 @@ class ViewStore:
         and positive-sum aggregates (inf where not boundable); groups NOT
         in ``q_keys`` are known-empty under the predicate's view-column
         conjuncts — their true answer is exactly zero."""
-        self.refresh()
+        with self._lock:
+            return self._upper_bounds_locked(query)
+
+    def _upper_bounds_locked(self, query: Query):
+        self._refresh_locked()
         view = self._find(query, need_exact=False)
         if view is None:
             return None

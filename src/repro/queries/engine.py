@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
+import time
 
 import jax
 import numpy as np
@@ -280,6 +282,11 @@ class EvalCache:
         self._stack_p = 0  # logical partitions currently written into it
         self.col_index = {s.name: i for i, s in enumerate(table.schema)}
         self.ones_index = len(table.schema)
+        # serving front door: the flush loop and healthz/stat readers can
+        # touch one cache from different threads; every public accessor
+        # holds this re-entrant lock so `_sync`'s clear-and-rebuild and an
+        # in-flight `get` can never interleave (see docs/serving.md)
+        self._lock = threading.RLock()
         self.codes_builds = 0
         self.cast_builds = 0
         self.stack_appends = 0  # in-place slack writes (streaming appends)
@@ -296,6 +303,10 @@ class EvalCache:
         (out-of-band mutation of a column array).  Safe to call anytime:
         a *declared* change (version bumped) is reconciled by `_sync`
         instead."""
+        with self._lock:
+            self._check_fingerprint_locked()
+
+    def _check_fingerprint_locked(self) -> None:
         self._fp_tick = 0
         if self.table.version != self._version:
             return
@@ -313,10 +324,14 @@ class EvalCache:
         mutation (data changed, version did not — checked every
         ``FP_CHECK_EVERY`` accessor calls and at every public batch
         entry via `check_fingerprint`)."""
+        with self._lock:
+            self._sync_locked()
+
+    def _sync_locked(self) -> None:
         if self.table.version == self._version:
             self._fp_tick += 1
             if self._fp_tick >= self.FP_CHECK_EVERY:
-                self.check_fingerprint()
+                self._check_fingerprint_locked()
             return
         rng = self.table.append_range(self._version)
         if rng is not None and self.table.fingerprint(rng[0]) != self._fp:
@@ -359,64 +374,72 @@ class EvalCache:
         self._fp_tick = 0
 
     def group_codes(self, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
-        self._sync()
-        hit = self._codes.get(groupby)
-        if hit is None:
-            self.codes_builds += 1
-            hit = self._codes[groupby] = group_codes(self.table, groupby)
-        return hit
+        with self._lock:
+            self._sync_locked()
+            hit = self._codes.get(groupby)
+            if hit is None:
+                self.codes_builds += 1
+                hit = self._codes[groupby] = group_codes(self.table, groupby)
+            return hit
 
     def segments(self, groupby: tuple[str, ...]) -> tuple[np.ndarray, int]:
         """((N·R,) flat partition-major segment ids, radix) — the bincount
         key the numpy lowering of the fused op reuses across a workload."""
-        self._sync()
-        hit = self._segs.get(groupby)
-        if hit is None:
-            codes, radix = self.group_codes(groupby)
-            n = self.table.num_partitions
-            seg = (codes + np.arange(n, dtype=np.int64)[:, None] * radix)
-            hit = self._segs[groupby] = (seg.reshape(-1), radix)
-        return hit
+        with self._lock:
+            self._sync_locked()
+            hit = self._segs.get(groupby)
+            if hit is None:
+                codes, radix = self.group_codes(groupby)
+                n = self.table.num_partitions
+                seg = (codes + np.arange(n, dtype=np.int64)[:, None] * radix)
+                hit = self._segs[groupby] = (seg.reshape(-1), radix)
+            return hit
 
     def f64(self, col: str) -> np.ndarray:
-        self._sync()
-        hit = self._f64.get(col)
-        if hit is None:
-            self.cast_builds += 1
-            hit = self._f64[col] = self.table.columns[col].astype(np.float64)
-        return hit
+        with self._lock:
+            self._sync_locked()
+            hit = self._f64.get(col)
+            if hit is None:
+                self.cast_builds += 1
+                hit = self._f64[col] = self.table.columns[col].astype(np.float64)
+            return hit
 
     def has_posinf(self, col: str) -> bool:
         """+inf rows defeat the half-open interval form (`x < hi` can never
         admit x = inf), so clauses on such columns take the host path."""
-        self._sync()
-        hit = self._posinf.get(col)
-        if hit is None:
-            hit = self._posinf[col] = bool(np.isposinf(self.table.columns[col]).any())
-        return hit
+        with self._lock:
+            self._sync_locked()
+            hit = self._posinf.get(col)
+            if hit is None:
+                hit = self._posinf[col] = bool(
+                    np.isposinf(self.table.columns[col]).any()
+                )
+            return hit
 
     def has_nonfinite(self, col: str) -> bool:
         """inf/NaN rows defeat the device driver's projection einsums (they
         contract zero coefficients against every column, and 0·inf = NaN),
         so aggregates over such columns take the host path and the stack is
         sanitized for the contraction inputs (`queries.device`)."""
-        self._sync()
-        hit = self._nonfinite.get(col)
-        if hit is None:
-            hit = self._nonfinite[col] = not bool(
-                np.isfinite(self.table.columns[col]).all()
-            )
-        return hit
+        with self._lock:
+            self._sync_locked()
+            hit = self._nonfinite.get(col)
+            if hit is None:
+                hit = self._nonfinite[col] = not bool(
+                    np.isfinite(self.table.columns[col]).all()
+                )
+            return hit
 
     def f32(self, col: str) -> np.ndarray:
-        self._sync()
-        hit = self._f32.get(col)
-        if hit is None:
-            data = self.table.columns[col]
-            hit = self._f32[col] = (
-                data if data.dtype == np.float32 else data.astype(np.float32)
-            )
-        return hit
+        with self._lock:
+            self._sync_locked()
+            hit = self._f32.get(col)
+            if hit is None:
+                data = self.table.columns[col]
+                hit = self._f32[col] = (
+                    data if data.dtype == np.float32 else data.astype(np.float32)
+                )
+            return hit
 
     def _host_stack(self, lo: int, hi: int) -> np.ndarray:
         """(n_cols+1, hi-lo, R) host column stack incl. the ones column."""
@@ -468,26 +491,27 @@ class EvalCache:
         plane's append headroom: `_grow_stack` writes new partitions into
         it in place, and the driver slices answers back to the real P.
         """
-        self._sync()
-        self.check_fingerprint()  # the stack is the costliest thing to poison
-        if self._stack is None:
-            import jax.numpy as jnp
+        with self._lock:
+            self._sync_locked()
+            self._check_fingerprint_locked()  # costliest thing to poison
+            if self._stack is None:
+                import jax.numpy as jnp
 
-            t = self.table
-            target = stack_partitions(t.num_partitions, self.plane)
-            stack = self._host_stack(0, t.num_partitions)
-            self.stack_rebuilds += 1
-            if self.plane is not None:
-                self._stack = self.plane.shard_partitions(
-                    stack, axis=1, target=target
-                )
-            else:
-                pad = target - t.num_partitions
-                if pad:
-                    stack = np.pad(stack, ((0, 0), (0, pad), (0, 0)))
-                self._stack = jnp.asarray(stack)
-            self._stack_p = t.num_partitions
-        return self._stack
+                t = self.table
+                target = stack_partitions(t.num_partitions, self.plane)
+                stack = self._host_stack(0, t.num_partitions)
+                self.stack_rebuilds += 1
+                if self.plane is not None:
+                    self._stack = self.plane.shard_partitions(
+                        stack, axis=1, target=target
+                    )
+                else:
+                    pad = target - t.num_partitions
+                    if pad:
+                        stack = np.pad(stack, ((0, 0), (0, pad), (0, 0)))
+                    self._stack = jnp.asarray(stack)
+                self._stack_p = t.num_partitions
+            return self._stack
 
     # distinct aggregate term tuples are unbounded across a serving
     # lifetime; each projection is a (P, R) float64 array, so the cache
@@ -495,21 +519,23 @@ class EvalCache:
     PROJ_CAPACITY = 32
 
     def projection(self, agg: Aggregate) -> np.ndarray:
-        self._sync()
-        if len(agg.terms) == 1 and agg.terms[0][0] == 1.0:
-            return self.f64(agg.terms[0][1])  # identity projection: alias
-        key = agg.terms
-        hit = self._proj.pop(key, None)
-        if hit is None:
-            hit = np.zeros(
-                (self.table.num_partitions, self.table.rows_per_partition), np.float64
-            )
-            for coef, col in agg.terms:
-                hit += coef * self.f64(col)
-        self._proj[key] = hit  # re-insert = most recently used
-        while len(self._proj) > self.PROJ_CAPACITY:
-            self._proj.pop(next(iter(self._proj)))
-        return hit
+        with self._lock:
+            self._sync_locked()
+            if len(agg.terms) == 1 and agg.terms[0][0] == 1.0:
+                return self.f64(agg.terms[0][1])  # identity projection: alias
+            key = agg.terms
+            hit = self._proj.pop(key, None)
+            if hit is None:
+                hit = np.zeros(
+                    (self.table.num_partitions, self.table.rows_per_partition),
+                    np.float64,
+                )
+                for coef, col in agg.terms:
+                    hit += coef * self.f64(col)
+            self._proj[key] = hit  # re-insert = most recently used
+            while len(self._proj) > self.PROJ_CAPACITY:
+                self._proj.pop(next(iter(self._proj)))
+            return hit
 
 
 class AnswerStore:
@@ -546,7 +572,8 @@ class AnswerStore:
 
     def __init__(self, table: Table, capacity: int = 256,
                  backend: str | None = UNSET, plane=UNSET, *,
-                 options: ExecOptions | None = None):
+                 options: ExecOptions | None = None,
+                 ttl: float | None = None, clock=None):
         options = exec_options(options, where="AnswerStore",
                                backend=backend, plane=plane)
         self.table = table
@@ -563,6 +590,22 @@ class AnswerStore:
         self._partial: dict[tuple[str, str], PartitionAnswers] = {}
         self._eval_cache = EvalCache(table, options=options)
         self._version = table.version
+        # answer max-age: long-running serve processes must not pin
+        # stale-but-valid answers forever (upstream data quality fixes,
+        # recomputed projections).  None = never expires (the offline
+        # default); a TTL'd entry past its age is re-evaluated on access
+        # and counted in ``ttl_expired`` (surfaced in serve_stats)
+        self.ttl = None if ttl is None else float(ttl)
+        if self.ttl is not None and self.ttl <= 0:
+            raise ValueError(f"AnswerStore ttl must be positive, got {ttl}")
+        self._clock = clock if clock is not None else time.monotonic
+        self._born: dict[str, float] = {}
+        self._partial_born: dict[tuple[str, str], float] = {}
+        self.ttl_expired = 0
+        # one flush-loop writer + concurrent stat readers / submitters can
+        # share a store; the re-entrant lock serializes every mutation
+        # path (LRU re-insert, _sync invalidation, delta refresh)
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.carried = 0  # entries kept across appends (selective inval.)
@@ -604,11 +647,32 @@ class AnswerStore:
         if rng is None or not self._delta_backend_safe(rng[0]):
             self._cache.clear()
             self._partial.clear()
+            self._born.clear()
+            self._partial_born.clear()
         self._version = self.table.version
         self._delta_caches.clear()  # delta views are per-version snapshots
         # surviving entries are merged lazily on access: their raw tensors
         # still have the pre-append partition count, which records exactly
         # where each entry's delta evaluation must start
+
+    def _expired(self, born: float | None) -> bool:
+        """Whether an entry inserted at ``born`` is past the max-age.
+
+        A TTL'd entry is still *valid* (append merging keeps it exact) —
+        expiry exists so multi-day serve processes re-derive answers on a
+        bounded schedule instead of pinning them forever."""
+        if self.ttl is None or born is None:
+            return False
+        return (self._clock() - born) > self.ttl
+
+    def _drop_expired(self, key: str) -> bool:
+        """Evict ``key`` from the full cache if past max-age; True if so."""
+        if self._expired(self._born.get(key)):
+            self._cache.pop(key, None)
+            self._born.pop(key, None)
+            self.ttl_expired += 1
+            return True
+        return False
 
     def _delta_view(self, start: int) -> tuple[Table, EvalCache]:
         """The appended partitions [start, P) as a throwaway table (column
@@ -672,28 +736,30 @@ class AnswerStore:
         return out
 
     def get(self, query: Query) -> PartitionAnswers:
-        self._sync()
-        key = query_key(query)
-        # non-destructive read: if the delta refresh below raises, the
-        # stale-but-mergeable entry must survive for the retry
-        hit = self._cache.get(key)
-        if hit is not None and hit.raw.shape[0] != self.table.num_partitions:
-            hit = self._refresh([(key, hit)])[key]  # append-stale: merge delta
-        if hit is not None:
-            self.hits += 1
-            self._cache.pop(key, None)
-            self._cache[key] = hit  # re-insert = most recently used
-            return hit
-        self.misses += 1
-        if self.injector is not None:
-            self.injector.read_ids_strict(
-                np.arange(self.table.num_partitions), "AnswerStore.get"
+        with self._lock:
+            self._sync()
+            key = query_key(query)
+            self._drop_expired(key)
+            # non-destructive read: if the delta refresh below raises, the
+            # stale-but-mergeable entry must survive for the retry
+            hit = self._cache.get(key)
+            if hit is not None and hit.raw.shape[0] != self.table.num_partitions:
+                hit = self._refresh([(key, hit)])[key]  # append-stale: merge
+            if hit is not None:
+                self.hits += 1
+                self._cache.pop(key, None)
+                self._cache[key] = hit  # re-insert = most recently used
+                return hit
+            self.misses += 1
+            if self.injector is not None:
+                self.injector.read_ids_strict(
+                    np.arange(self.table.num_partitions), "AnswerStore.get"
+                )
+            ans = per_partition_answers(
+                self.table, query, cache=self._eval_cache, options=self.options
             )
-        ans = per_partition_answers(
-            self.table, query, cache=self._eval_cache, options=self.options
-        )
-        self._insert(key, ans)
-        return ans
+            self._insert(key, ans)
+            return ans
 
     def get_subset(self, query: Query, part_ids: np.ndarray) -> PartitionAnswers:
         """Exact answers for one query restricted to ``part_ids`` (raw rows
@@ -705,86 +771,104 @@ class AnswerStore:
         round's or as the full answer.  When the full answer happens to be
         held, the subset is sliced from it for free.
         """
-        self._sync()
-        ids = np.asarray(part_ids, dtype=np.int64)
-        key = (query_key(query), subset_fingerprint(ids))
-        hit = self._partial.get(key)
-        if hit is not None:
-            self.hits += 1
-            self._partial.pop(key, None)
-            self._partial[key] = hit  # re-insert = most recently used
-            return hit
-        full = self._cache.get(key[0])
-        if full is not None and full.raw.shape[0] == self.table.num_partitions:
-            self.hits += 1
-            ans = PartitionAnswers(query, full.group_keys, full.raw[ids], full.plans)
-        else:
-            self.misses += 1
-            t = self.table
-            cols = {k: v[ids] for k, v in t.columns.items()}
-            view = Table(t.schema, cols, name=f"{t.name}/subset")
-            cache = EvalCache(view, options=self.options)
-            ans = per_partition_answers(view, query, cache=cache, options=self.options)
-        self._partial[key] = ans
-        while len(self._partial) > self.capacity:
-            self._partial.pop(next(iter(self._partial)))
-        return ans
+        with self._lock:
+            self._sync()
+            ids = np.asarray(part_ids, dtype=np.int64)
+            key = (query_key(query), subset_fingerprint(ids))
+            if self._expired(self._partial_born.get(key)):
+                self._partial.pop(key, None)
+                self._partial_born.pop(key, None)
+                self.ttl_expired += 1
+            hit = self._partial.get(key)
+            if hit is not None:
+                self.hits += 1
+                self._partial.pop(key, None)
+                self._partial[key] = hit  # re-insert = most recently used
+                return hit
+            self._drop_expired(key[0])
+            full = self._cache.get(key[0])
+            if full is not None and full.raw.shape[0] == self.table.num_partitions:
+                self.hits += 1
+                ans = PartitionAnswers(
+                    query, full.group_keys, full.raw[ids], full.plans
+                )
+            else:
+                self.misses += 1
+                t = self.table
+                cols = {k: v[ids] for k, v in t.columns.items()}
+                view = Table(t.schema, cols, name=f"{t.name}/subset")
+                cache = EvalCache(view, options=self.options)
+                ans = per_partition_answers(
+                    view, query, cache=cache, options=self.options
+                )
+            self._partial[key] = ans
+            self._partial_born[key] = self._clock()
+            while len(self._partial) > self.capacity:
+                old = next(iter(self._partial))
+                self._partial.pop(old)
+                self._partial_born.pop(old, None)
+            return ans
 
     def get_batch(self, queries: list[Query]) -> list[PartitionAnswers]:
         """Answers for a batch; all misses evaluated in one stacked pass
         (and, after an append, all append-stale hits brought current in
         one stacked delta pass)."""
-        self._sync()
-        n = self.table.num_partitions
-        keys = [query_key(q) for q in queries]
-        # snapshot every pre-cached answer up front (non-destructively, so
-        # an exception in the miss pass leaves the cache intact): the
-        # re-insertions below may evict an entry before its position in the
-        # batch is reached, and it was skipped by the miss pass
-        held: dict[str, PartitionAnswers] = {}
-        missing: dict[str, Query] = {}
-        for q, key in zip(queries, keys):
-            if key in held or key in missing:
-                continue
-            hit = self._cache.get(key)
-            if hit is not None:
-                held[key] = hit
-            else:
-                missing[key] = q
-        stale = [(k, a) for k, a in held.items() if a.raw.shape[0] != n]
-        if stale:
-            held.update(self._refresh(stale))
-        fresh: dict[str, PartitionAnswers] = {}
-        if missing:
-            if self.injector is not None:
-                self.injector.read_ids_strict(
-                    np.arange(n), "AnswerStore.get_batch"
+        with self._lock:
+            self._sync()
+            n = self.table.num_partitions
+            keys = [query_key(q) for q in queries]
+            # snapshot every pre-cached answer up front (non-destructively,
+            # so an exception in the miss pass leaves the cache intact): the
+            # re-insertions below may evict an entry before its position in
+            # the batch is reached, and it was skipped by the miss pass
+            held: dict[str, PartitionAnswers] = {}
+            missing: dict[str, Query] = {}
+            for q, key in zip(queries, keys):
+                if key in held or key in missing:
+                    continue
+                self._drop_expired(key)
+                hit = self._cache.get(key)
+                if hit is not None:
+                    held[key] = hit
+                else:
+                    missing[key] = q
+            stale = [(k, a) for k, a in held.items() if a.raw.shape[0] != n]
+            if stale:
+                held.update(self._refresh(stale))
+            fresh: dict[str, PartitionAnswers] = {}
+            if missing:
+                if self.injector is not None:
+                    self.injector.read_ids_strict(
+                        np.arange(n), "AnswerStore.get_batch"
+                    )
+                evaluated = per_partition_answers_batch(
+                    self.table,
+                    list(missing.values()),
+                    cache=self._eval_cache,
+                    options=self.options,
                 )
-            evaluated = per_partition_answers_batch(
-                self.table,
-                list(missing.values()),
-                cache=self._eval_cache,
-                options=self.options,
-            )
-            fresh = dict(zip(missing.keys(), evaluated))
-        out: list[PartitionAnswers] = []
-        for key in keys:
-            hit = self._cache.pop(key, None)
-            if key in held:
-                hit = held[key]  # the refreshed object, not the stale one
-            if hit is not None:
-                self.hits += 1
-            else:
-                self.misses += 1
-                hit = fresh[key]
-            self._insert(key, hit)
-            out.append(hit)
-        return out
+                fresh = dict(zip(missing.keys(), evaluated))
+            out: list[PartitionAnswers] = []
+            for key in keys:
+                hit = self._cache.pop(key, None)
+                if key in held:
+                    hit = held[key]  # the refreshed object, not the stale one
+                if hit is not None:
+                    self.hits += 1
+                else:
+                    self.misses += 1
+                    hit = fresh[key]
+                self._insert(key, hit)
+                out.append(hit)
+            return out
 
     def _insert(self, key: str, ans: PartitionAnswers) -> None:
         self._cache[key] = ans
+        self._born.setdefault(key, self._clock())
         while len(self._cache) > self.capacity:
-            self._cache.pop(next(iter(self._cache)))
+            old = next(iter(self._cache))
+            self._cache.pop(old)
+            self._born.pop(old, None)
 
     def __len__(self) -> int:
         return len(self._cache)

@@ -1,4 +1,25 @@
-"""Batched, jit-stable serving layer for the PS³ picker (see engine.py)."""
-from repro.serving.engine import BatchPicker, ServingStats
+"""Batched, jit-stable serving layer for the PS³ picker.
 
-__all__ = ["BatchPicker", "ServingStats"]
+`engine.BatchPicker` is the batched execution core (one vectorized
+feature pass, bounded compiles, answer LRU); `frontdoor.FrontDoor` is
+the concurrency layer above it — admission control, backpressure, and
+graceful degradation under overload (see docs/serving.md).
+"""
+from repro.serving.engine import BatchPicker, ServingStats
+from repro.serving.frontdoor import (
+    CircuitBreaker,
+    FrontDoor,
+    FrontDoorConfig,
+    Ticket,
+    TokenBucket,
+)
+
+__all__ = [
+    "BatchPicker",
+    "CircuitBreaker",
+    "FrontDoor",
+    "FrontDoorConfig",
+    "ServingStats",
+    "Ticket",
+    "TokenBucket",
+]

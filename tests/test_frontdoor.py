@@ -1,0 +1,593 @@
+"""Serving front door: admission, backpressure, degradation (ISSUE 9).
+
+The contract under test: `FrontDoor.submit` admits or raises a *typed*
+`OverloadError` (rate limit → bulkhead → global shed, in that order, and
+a global shed only with the brownout ladder already at its top);
+`tick()` micro-batches the queues through the shared Session with
+deadline propagation (expired-in-queue requests shed before any read,
+mid-execution expiry returns the best answer so far or raises
+`DeadlineExceededError` under strict); tenants are isolated (one hot
+tenant cannot move another's latency or shed rate); the breaker routes
+around a backend whose fault_report goes bad; and the compile census
+stays flat across concurrent mixed-shape traffic.  Everything runs on a
+`faults.VirtualClock` — nothing sleeps, every assertion is a pure
+function of the schedule — except the thread/asyncio lifecycle tests,
+which exercise the real-clock pump.
+
+Satellites covered here: answer-cache TTLs (`AnswerStore` max-age +
+`serve_stats` expiry counter), the `EvalCache`/`AnswerStore` lock
+(concurrent-access regression), and the bounded `Session._rates` EMA
+map (`ema_keys`).
+"""
+import asyncio
+import os
+import threading
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.backends import ExecOptions
+from repro.core.picker import PickerConfig
+from repro.data.datasets import make_dataset
+from repro.data.table import Table
+from repro.errors import (
+    DeadlineExceededError,
+    OverloadError,
+)
+from repro.faults import FaultPolicy, VirtualClock
+from repro.queries import device
+from repro.queries.engine import AnswerStore
+from repro.queries.generator import WorkloadSpec
+from repro.serving import FrontDoor, FrontDoorConfig, TokenBucket
+
+SEED = int(os.environ.get("CHAOS_SEED", "20240807"))
+HOST = ExecOptions(backend="host")
+TINY_PICKER = PickerConfig(num_trees=8, tree_depth=3, feature_selection=False)
+
+# generous defaults for tests that are not about rate limiting
+OPEN_RATE = dict(tenant_rate=1e9, tenant_burst=1e9)
+
+
+def _make_session(options=HOST, **session_kw):
+    table = make_dataset("kdd", num_partitions=16, rows_per_partition=64)
+    sess = api.Session(table, options=options, **session_kw)
+    sess.prepare(WorkloadSpec(table, seed=1), num_train_queries=10,
+                 picker_config=TINY_PICKER)
+    return sess
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    sess = _make_session()
+    queries = WorkloadSpec(sess.table, seed=7).sample_workload(6)
+    return SimpleNamespace(sess=sess, queries=queries)
+
+
+def _door(sess, clock, **cfg_kw):
+    defaults = dict(max_queue=64, batch_cap=4, **OPEN_RATE)
+    defaults.update(cfg_kw)
+    return FrontDoor(
+        sess, clock=clock, service_model=lambda p: 0.002 + 0.0005 * p,
+        config=FrontDoorConfig(**defaults),
+    )
+
+
+# --------------------------------------------------------------------------
+# the tentpole: admission → flush → resolution
+# --------------------------------------------------------------------------
+def test_happy_path_matches_direct_execution(ctx):
+    clk = VirtualClock()
+    fd = _door(ctx.sess, clk)
+    specs = [api.QuerySpec(q, error_bound=0.2) for q in ctx.queries]
+    tickets = [fd.submit(s, tenant=f"t{i % 2}") for i, s in enumerate(specs)]
+    n = fd.run_until_idle()
+    assert n == len(tickets)
+    for s, t in zip(specs, tickets):
+        assert t.done() and t.error is None
+        direct = ctx.sess.execute(s)
+        assert np.array_equal(t.answer.group_keys, direct.group_keys)
+        assert np.allclose(t.answer.estimate, direct.estimate, equal_nan=True)
+        assert t.latency >= 0 and t.queue_seconds >= 0
+    st = fd.serve_stats()
+    assert st["completed"] == len(tickets)
+    assert st["queue_depth"] == 0
+    assert clk.now() > 0  # virtual service time actually elapsed
+
+
+def test_coalescing_identical_requests(ctx):
+    clk = VirtualClock()
+    fd = _door(ctx.sess, clk, batch_cap=8)
+    spec = api.QuerySpec(ctx.queries[0], error_bound=0.2)
+    t1 = fd.submit(spec, tenant="a")
+    t2 = fd.submit(spec, tenant="b")
+    misses0 = ctx.sess.answers.misses
+    fd.run_until_idle()
+    assert t1.answer is t2.answer  # one planner call fanned out
+    assert fd.serve_stats()["coalesced"] == 1
+    assert ctx.sess.answers.misses == misses0  # fully warm: zero re-eval
+
+
+def test_token_bucket_rate_limit():
+    clk = VirtualClock()
+    bucket = TokenBucket(rate=2.0, burst=2.0, now=clk.now())
+    assert bucket.try_take(clk.now()) and bucket.try_take(clk.now())
+    assert not bucket.try_take(clk.now())
+    eta = bucket.eta(clk.now())
+    assert eta == pytest.approx(0.5)
+    clk.advance(eta)
+    assert bucket.try_take(clk.now())
+
+
+def test_submit_rate_limited_typed(ctx):
+    clk = VirtualClock()
+    fd = _door(ctx.sess, clk, tenant_rate=1.0, tenant_burst=1.0)
+    spec = api.QuerySpec(ctx.queries[0], error_bound=0.2)
+    fd.submit(spec, tenant="slow")
+    with pytest.raises(OverloadError) as ei:
+        fd.submit(spec, tenant="slow")
+    assert ei.value.reason == "rate_limited"
+    assert ei.value.tenant == "slow"
+    assert ei.value.retry_after > 0
+    clk.advance(ei.value.retry_after)
+    fd.submit(spec, tenant="slow")  # token refilled: admitted again
+    assert fd.serve_stats()["tenants"]["slow"]["rate_limited"] == 1
+
+
+def test_bulkhead_queue_cap_isolates_tenants(ctx):
+    clk = VirtualClock()
+    fd = _door(ctx.sess, clk, tenant_queue_cap=2, max_queue=64)
+    spec = api.QuerySpec(ctx.queries[0], error_bound=0.2)
+    fd.submit(spec, tenant="hog")
+    fd.submit(spec, tenant="hog")
+    with pytest.raises(OverloadError) as ei:
+        fd.submit(spec, tenant="hog")
+    assert ei.value.reason == "tenant_queue_full"
+    # the hog's full bulkhead does not consume anyone else's queue space
+    fd.submit(spec, tenant="bystander")
+    fd.run_until_idle()
+    st = fd.serve_stats()["tenants"]
+    assert st["hog"]["queue_full"] == 1 and st["bystander"]["admitted"] == 1
+
+
+def test_shed_only_after_brownout_ladder_exhausted(ctx):
+    clk = VirtualClock()
+    fd = _door(ctx.sess, clk, max_queue=6, batch_cap=2, brownout_levels=2)
+    spec = api.QuerySpec(ctx.queries[0], error_bound=0.2)
+    sheds = []
+    for i in range(12):
+        try:
+            fd.submit(spec, tenant=f"t{i % 3}")
+        except OverloadError as e:
+            assert e.reason == "shed" and e.retry_after > 0
+            # invariant: at shed time the ladder was already at its top
+            assert fd.level == fd.config.brownout_levels
+            sheds.append(e)
+    assert sheds, "flood must overflow the global queue"
+    st = fd.serve_stats()
+    assert st["sheds"] == st["sheds_at_max_level"] == len(sheds)
+    assert st["first_degrade_tick"] <= st["first_shed_tick"]
+    fd.run_until_idle()
+    assert fd.serve_stats()["queue_depth"] == 0
+
+
+def test_brownout_widens_bounds_then_recovers(ctx):
+    clk = VirtualClock()
+    fd = _door(ctx.sess, clk, max_queue=8, batch_cap=2, brownout_levels=3)
+    spec = api.QuerySpec(ctx.queries[0], error_bound=0.10)
+    tickets = [fd.submit(spec, tenant=f"t{i}") for i in range(6)]
+    fd.run_until_idle()
+    # depth 6 >= high_water·8 at the first flush: level rose, requests
+    # executed with widened bounds and were counted as degraded
+    levels = [t.degrade_level for t in tickets]
+    assert max(levels) >= 1
+    st = fd.serve_stats()
+    assert st["degraded_answers"] >= sum(1 for v in levels if v > 0)
+    # idle ticks decay the level back to healthy one step at a time
+    for _ in range(fd.config.brownout_levels):
+        fd.tick()
+    assert fd.level == 0
+    assert fd.healthz()["status"] == "ok"
+
+
+def test_brownout_budget_cap_reaches_planner(ctx):
+    """Level-degraded requests must actually read fewer partitions."""
+    planner = ctx.sess.planner
+    full = planner.answer(ctx.queries[0], error_bound=0.01)
+    capped = planner.answer(ctx.queries[0], error_bound=0.01, budget_cap=4)
+    assert capped.partitions_read < full.partitions_read
+    assert capped.partitions_read <= 4 + capped.plan.outliers
+    assert capped.plan.degraded or capped.plan.predicted_error <= 0.01
+
+
+# --------------------------------------------------------------------------
+# deadline semantics (satellite): virtual-time clocks end to end
+# --------------------------------------------------------------------------
+def test_deadline_expired_in_queue_sheds_before_any_read(ctx):
+    clk = VirtualClock()
+    fd = _door(ctx.sess, clk)
+    strict = fd.submit(
+        api.QuerySpec(ctx.queries[0], error_bound=0.2, strict=True),
+        deadline=clk.now() + 0.5,
+    )
+    soft = fd.submit(
+        api.QuerySpec(ctx.queries[1], error_bound=0.2),
+        deadline=clk.now() + 0.5,
+    )
+    reads0 = ctx.sess.answers.hits + ctx.sess.answers.misses
+    clk.advance(1.0)  # both expire while still queued
+    fd.run_until_idle()
+    assert isinstance(strict.error, DeadlineExceededError)
+    assert isinstance(soft.error, OverloadError)
+    assert soft.error.reason == "deadline"
+    assert ctx.sess.answers.hits + ctx.sess.answers.misses == reads0
+    st = fd.serve_stats()["tenants"]["default"]
+    assert st["deadline_shed"] == 2
+
+
+def test_deadline_mid_execution_returns_best_so_far():
+    """A deadline that expires *during* escalation (injector advancing a
+    shared virtual clock) stops the planner between rounds: non-strict
+    keeps the best answer with honest flags, strict raises."""
+    table = make_dataset("kdd", num_partitions=48, rows_per_partition=64)
+    sess = api.Session(table, options=ExecOptions(
+        backend="host",
+        faults=FaultPolicy(seed=SEED, read_latency=0.1),  # 0.1s per chunk
+    ))
+    sess.prepare(WorkloadSpec(table, seed=1), num_train_queries=10,
+                 picker_config=TINY_PICKER)
+    clk = VirtualClock()
+    sess.planner.injector.clock = clk  # reads advance the deadline clock
+    q = WorkloadSpec(sess.table, seed=7).sample_workload(3)[0]
+    # unachievable bound: escalation would read everything, but the
+    # deadline lands after the first couple of rounds
+    ans = sess.execute(
+        api.QuerySpec(q, error_bound=0.001),
+        deadline=clk.now() + 0.25, clock=clk.now,
+    )
+    assert ans.plan.deadline_hit and ans.plan.degraded
+    assert 0 < ans.partitions_read < sess.table.num_partitions
+    assert ans.plan.predicted_error > 0  # honest: bound NOT met
+    with pytest.raises(DeadlineExceededError) as ei:
+        sess.execute(
+            api.QuerySpec(q, error_bound=0.001, strict=True),
+            deadline=clk.now() + 0.25, clock=clk.now,
+        )
+    assert ei.value.partitions_read > 0
+    # DeadlineExceededError is in the BudgetExhaustedError family: strict
+    # callers that already catch budget exhaustion keep working
+    assert isinstance(ei.value, api.BudgetExhaustedError)
+
+
+def test_deadline_already_expired_strict_raises_without_reading(ctx):
+    clk = VirtualClock(start=10.0)
+    misses0 = ctx.sess.answers.misses
+    with pytest.raises(DeadlineExceededError) as ei:
+        ctx.sess.execute(
+            api.QuerySpec(ctx.queries[0], error_bound=0.2, strict=True),
+            deadline=5.0, clock=clk.now,
+        )
+    assert ei.value.partitions_read == 0
+    assert ctx.sess.answers.misses == misses0
+
+
+# --------------------------------------------------------------------------
+# circuit breaker over routes
+# --------------------------------------------------------------------------
+def test_breaker_trips_on_bad_route_and_half_opens():
+    table = make_dataset("kdd", num_partitions=16, rows_per_partition=64)
+    bad = api.Session(table, options=ExecOptions(
+        backend="host",
+        faults=FaultPolicy(seed=SEED, dead_frac=1.0, max_attempts=1),
+    ))
+    bad.prepare(WorkloadSpec(table, seed=1), num_train_queries=10,
+                picker_config=TINY_PICKER)
+    good = api.Session(table, options=HOST)
+    good.prepare(WorkloadSpec(table, seed=1), num_train_queries=10,
+                 picker_config=TINY_PICKER)
+    clk = VirtualClock()
+    fd = FrontDoor(
+        good, routes=[("bad", bad), ("good", good)], clock=clk,
+        service_model=lambda p: 0.01,
+        config=FrontDoorConfig(breaker_min_reads=4, breaker_threshold=0.5,
+                               breaker_cooldown=5.0, **OPEN_RATE),
+    )
+    q = WorkloadSpec(table, seed=7).sample_workload(2)[0]
+    spec = api.QuerySpec(q, error_bound=0.2)
+    # first flush goes to the bad route (every read fails → degraded
+    # answer), whose fault_report trips the breaker
+    t0 = fd.submit(spec)
+    fd.run_until_idle()
+    assert t0.answer is not None and t0.answer.plan.degraded
+    assert fd.breakers["bad"].state == "open"
+    # while open, traffic routes around: clean answers from "good"
+    t1 = fd.submit(spec)
+    fd.run_until_idle()
+    assert t1.error is None and not t1.answer.plan.degraded
+    assert fd.breakers["bad"].state == "open"
+    # cooldown elapses → the breaker half-opens for a probe
+    clk.advance(6.0)
+    assert fd.breakers["bad"].allow(clk.now())
+    assert fd.breakers["bad"].state == "half_open"
+    st = fd.serve_stats()
+    assert st["breakers"]["bad"]["trips"] == 1
+    assert st["breakers"]["good"]["state"] == "closed"
+
+
+# --------------------------------------------------------------------------
+# tenant fairness under a 10× hot tenant (chaos lane)
+# --------------------------------------------------------------------------
+def _run_victim_schedule(fd, clk, spec, arrivals, hot_spec=None,
+                         hot_arrivals=()):
+    """Drive deterministic virtual-time traffic; returns victim tickets."""
+    victim, hot_refused = [], 0
+    events = sorted(
+        [(t, "victim") for t in arrivals]
+        + [(t, "hot") for t in hot_arrivals]
+    )
+    i = 0
+    while i < len(events) or fd.serve_stats()["queue_depth"] > 0:
+        if i < len(events) and (
+            fd.serve_stats()["queue_depth"] == 0 or events[i][0] <= clk.now()
+        ):
+            t_arr, who = events[i]
+            clk.advance_to(t_arr)
+            try:
+                tkt = fd.submit(
+                    hot_spec if who == "hot" else spec, tenant=who
+                )
+                if who == "victim":
+                    victim.append(tkt)
+            except OverloadError:
+                if who == "hot":
+                    hot_refused += 1
+                else:
+                    victim.append(None)
+            i += 1
+        else:
+            fd.tick()
+    fd.run_until_idle()
+    return victim, hot_refused
+
+
+@pytest.mark.chaos
+def test_hot_tenant_cannot_move_victim_latency(ctx):
+    cfg = dict(max_queue=32, batch_cap=4, tenant_slots=2, tenant_queue_cap=8,
+               tenant_rate=50.0, tenant_burst=8.0)
+    spec = api.QuerySpec(ctx.queries[0], error_bound=0.2)
+    hot_spec = api.QuerySpec(ctx.queries[1], error_bound=0.2)
+    arrivals = [0.05 * k for k in range(40)]  # victim: well under its limit
+    # solo baseline
+    clk_a = VirtualClock()
+    fd_a = _door(ctx.sess, clk_a, **cfg)
+    solo, _ = _run_victim_schedule(fd_a, clk_a, spec, arrivals)
+    # same victim schedule + a hot tenant offering 10× its rate limit
+    clk_b = VirtualClock()
+    fd_b = _door(ctx.sess, clk_b, **cfg)
+    hot_arrivals = [0.002 * k for k in range(1000)]  # 500/s vs 50/s limit
+    mixed, hot_refused = _run_victim_schedule(
+        fd_b, clk_b, spec, arrivals, hot_spec, hot_arrivals
+    )
+    assert hot_refused > 0  # the hot tenant was actually throttled
+    solo_lat = np.asarray([t.latency for t in solo if t is not None])
+    mixed_lat = np.asarray([t.latency for t in mixed if t is not None])
+    solo_shed = sum(1 for t in solo if t is None)
+    mixed_shed = sum(1 for t in mixed if t is None)
+    assert mixed_shed == solo_shed == 0  # isolation: victim never shed
+    p99_solo = float(np.percentile(solo_lat, 99))
+    p99_mixed = float(np.percentile(mixed_lat, 99))
+    # bulkhead slots bound the spillover exactly: in any flush the hot
+    # tenant occupies at most tenant_slots of the batch, so the victim's
+    # tail moves by at most that many max-size service times
+    svc_max = 0.002 + 0.0005 * ctx.sess.table.num_partitions
+    assert p99_mixed <= p99_solo + cfg["tenant_slots"] * svc_max, (
+        p99_solo, p99_mixed)
+    stats = fd_b.serve_stats()["tenants"]
+    assert stats["hot"]["rate_limited"] + stats["hot"]["queue_full"] > 0
+    assert stats["victim"]["shed"] == 0
+
+
+# --------------------------------------------------------------------------
+# compile census flat across concurrent mixed-shape traffic
+# --------------------------------------------------------------------------
+def test_census_flat_under_mixed_shape_traffic():
+    sess = _make_session(options=ExecOptions(backend="device"))
+    chunk = sess.planner_config.chunk
+    table = sess.table
+    probes = [q for q in WorkloadSpec(table, seed=11).sample_workload(8)
+              if q.groupby][:3]
+    if not probes:
+        pytest.skip("workload sample produced no group-by probes")
+    sub = Table(table.schema,
+                {k: v[:chunk] for k, v in table.columns.items()},
+                name=f"{table.name}/censusprobe")
+    expected = set()
+    for q in probes:
+        expected |= device.workload_census(sub, [q])
+    device.TRACES.reset()
+    clk = VirtualClock()
+    fd = _door(sess, clk, batch_cap=8, max_queue=64)
+    tickets = []
+    for rep in range(3):  # interleave tenants and shapes across flushes
+        for i, q in enumerate(probes):
+            tickets.append(fd.submit(
+                api.QuerySpec(q, error_bound=0.1 if rep else 0.2),
+                tenant=f"t{(rep + i) % 3}",
+            ))
+    fd.run_until_idle()
+    assert all(t.error is None for t in tickets)
+    assert device.TRACES.total() <= len(expected), (
+        device.TRACES.counts(), expected)
+    assert fd.serve_stats()["eval_compiles"] <= len(expected)
+
+
+# --------------------------------------------------------------------------
+# satellites: answer TTLs, store locks, bounded EMA map
+# --------------------------------------------------------------------------
+def test_answer_store_ttl_expires_entries():
+    table = make_dataset("kdd", num_partitions=8, rows_per_partition=64)
+    q = WorkloadSpec(table, seed=3).sample_workload(2)[0]
+    clk = VirtualClock()
+    store = AnswerStore(table, options=HOST, ttl=10.0, clock=clk.now)
+    store.get(q)
+    assert store.misses == 1
+    store.get(q)
+    assert store.hits == 1  # within max-age: served from cache
+    clk.advance(11.0)
+    store.get(q)
+    assert store.misses == 2 and store.ttl_expired == 1
+    # partial (subset-fingerprint) entries age out the same way
+    ids = np.arange(4, dtype=np.int64)
+    store.get_subset(q, ids)
+    hits0 = store.hits
+    store.get_subset(q, ids)
+    assert store.hits == hits0 + 1
+    clk.advance(11.0)
+    store.get_subset(q, ids)
+    assert store.ttl_expired >= 2
+    with pytest.raises(ValueError, match="ttl"):
+        AnswerStore(table, options=HOST, ttl=0.0)
+
+
+def test_session_ttl_expiry_counted_in_serve_stats():
+    clk = VirtualClock()
+    table = make_dataset("kdd", num_partitions=8, rows_per_partition=64)
+    sess = api.Session(table, options=HOST, answer_ttl=30.0, clock=clk.now)
+    sess.prepare(WorkloadSpec(table, seed=1), num_train_queries=8,
+                 picker_config=TINY_PICKER)
+    q = WorkloadSpec(table, seed=3).sample_workload(2)[0]
+    spec = api.QuerySpec(q, budget=8)
+    sess.execute(spec)
+    misses0 = sess.answers.misses
+    sess.execute(spec)
+    assert sess.answers.misses == misses0  # warm within max-age
+    clk.advance(31.0)
+    sess.execute(spec)
+    assert sess.answers.misses > misses0
+    assert sess.stats()["answer_ttl_expired"] >= 1
+    fd = FrontDoor(sess, clock=clk)
+    assert fd.serve_stats()["answer_ttl_expired"] >= 1
+
+
+def test_answer_store_concurrent_access_regression(ctx):
+    """Satellite 2: concurrent get/get_subset/get_batch with a tiny LRU
+    used to interleave _sync with eviction; under the store lock every
+    thread must see internally-consistent answers and no exceptions."""
+    table = ctx.sess.table
+    queries = ctx.queries[:4]
+    store = AnswerStore(table, capacity=2, options=HOST)  # constant churn
+    expected = {q.describe(): store.get(q).raw.copy() for q in queries}
+    errors: list = []
+    start = threading.Barrier(6)
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            start.wait(timeout=10)
+            for _ in range(30):
+                q = queries[int(rng.integers(len(queries)))]
+                mode = int(rng.integers(3))
+                if mode == 0:
+                    ans = store.get(q)
+                    assert np.array_equal(ans.raw, expected[q.describe()])
+                elif mode == 1:
+                    ids = np.sort(rng.choice(
+                        table.num_partitions, size=4, replace=False
+                    )).astype(np.int64)
+                    ans = store.get_subset(q, ids)
+                    assert ans.raw.shape[0] == 4
+                else:
+                    store.get_batch(list(queries))
+        except Exception as e:  # pragma: no cover - failure capture
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+
+
+def test_session_rates_ema_map_is_bounded(ctx):
+    sess = ctx.sess
+    q = ctx.queries[0]
+    saved = dict(sess._rates)
+    try:
+        # mixed traffic sweeping (backend, chunk) keys: the LRU must hold
+        # the newest MAX_RATE_KEYS and evict the rest
+        for i in range(api.Session.MAX_RATE_KEYS + 8):
+            key = (f"backend{i}", 16)
+            sess._rate_key = lambda key=key: key  # instance override
+            sess.execute(api.QuerySpec(q, budget=2))
+        stats = sess.stats()
+        assert stats["ema_keys"] == len(sess._rates)
+        assert stats["ema_keys"] <= api.Session.MAX_RATE_KEYS
+        newest = (f"backend{api.Session.MAX_RATE_KEYS + 7}", 16)
+        assert newest in sess._rates
+    finally:
+        del sess._rate_key  # restore the class method
+        sess._rates.clear()
+        sess._rates.update(saved)
+
+
+# --------------------------------------------------------------------------
+# real-clock lifecycle: thread pump + asyncio face
+# --------------------------------------------------------------------------
+def test_threaded_pump_concurrent_submitters(ctx):
+    fd = FrontDoor(ctx.sess, config=FrontDoorConfig(**OPEN_RATE))
+    fd.start(interval=0.001)
+    try:
+        results: dict[int, object] = {}
+        errors: list = []
+
+        def client(i):
+            try:
+                spec = api.QuerySpec(
+                    ctx.queries[i % len(ctx.queries)], error_bound=0.2
+                )
+                t = fd.submit(spec, tenant=f"client{i % 3}")
+                results[i] = t.result(timeout=60)
+            except Exception as e:  # pragma: no cover - failure capture
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        assert len(results) == 8
+        assert all(r.estimate is not None for r in results.values())
+    finally:
+        fd.stop()
+    assert fd.serve_stats()["completed"] >= 8
+
+
+def test_asyncio_serve_face(ctx):
+    fd = FrontDoor(ctx.sess, config=FrontDoorConfig(**OPEN_RATE))
+    fd.start(interval=0.001)
+
+    async def main():
+        specs = [api.QuerySpec(q, error_bound=0.2) for q in ctx.queries[:4]]
+        return await asyncio.gather(
+            *(fd.serve(s, tenant=f"a{i % 2}") for i, s in enumerate(specs))
+        )
+
+    try:
+        answers = asyncio.run(main())
+    finally:
+        fd.stop()
+    assert len(answers) == 4
+    assert all(a.partitions_read >= 0 for a in answers)
+
+
+def test_healthz_snapshot_shape(ctx):
+    fd = _door(ctx.sess, VirtualClock())
+    h = fd.healthz()
+    assert h["status"] == "ok" and h["queue_depth"] == 0
+    assert set(h) >= {"status", "queue_depth", "brownout_level",
+                      "latency_p99", "breakers"}
