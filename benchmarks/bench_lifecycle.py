@@ -1,0 +1,263 @@
+"""Lifecycle plane benchmark: deletes/compaction/rebalancing vs cold rebuild.
+
+Measures the partition lifecycle plane (`repro.lifecycle`) end to end on
+the device backend: a table with a partition directory receives a stream
+of soft-deletes, compactions and rebalances, and after each op the
+derived structures (sketches via `SketchStore`, per-partition answers
+and the device column stack via `AnswerStore`/`EvalCache`) are brought
+current incrementally.  The same work the pre-lifecycle way — a cold
+`build_sketches` + full workload re-evaluation per op — gives the
+within-run ratio that is the gated metric (machine speed cancels;
+`check_regression.py`).
+
+The in-run assertions are part of the benchmark's contract, mirroring
+bench_streaming's:
+
+  * census-flat: after one warm-up delete/compact/rebalance cycle,
+    every further lifecycle op compiles *nothing* — compaction and
+    rebalancing rewrite the device stack in-bucket instead of
+    re-tracing grown/shrunk shapes;
+  * no full rebuilds: every sync along the stream folds the lifecycle
+    events incrementally (`sketch_full_rebuilds == 0`), and the stack
+    is rewritten (not dropped) on every slot move;
+  * bit-parity: the incrementally maintained sketches and answers are
+    byte-identical to a cold rebuild of the final table.
+
+The second section is the delete-aware planner gate: after tombstoning
+a quarter of a trained context's partitions, the error-bounded planner
+must still meet its stated bound against the live-only ground truth on
+>= 90% of queries at the 5% bound — deleted mass has left the stratum
+populations, so confidence intervals stay honest (asserted in-run,
+gated as ``lifecycle_coverage``).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.bench_planner import _rel_err
+from benchmarks.common import get_context, timed as _timed, write_result
+from repro import lifecycle
+from repro.backends import ExecOptions
+from repro.core import ingest
+from repro.core.sketches import SketchStore, build_sketches
+from repro.data.datasets import make_dataset
+from repro.data.table import Table, append_partitions
+from repro.distributed import dataplane
+from repro.planner import QueryPlanner, ViewStore
+from repro.queries import device
+from repro.queries.engine import (
+    AnswerStore,
+    EvalCache,
+    per_partition_answers,
+    per_partition_answers_batch,
+)
+from repro.queries.generator import WorkloadSpec
+
+
+def _all_traces() -> int:
+    """Every lifecycle-relevant census: query eval + ingest kernels +
+    stack writes — 'lifecycle ops compile nothing after warm-up' must
+    hold for all three, not just the eval driver."""
+    return device.TRACES.total() + ingest.TRACES.total() + dataplane.TRACES.total()
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+# lifecycle measures the single-device device backend; mesh pinned off
+DEVICE_OPTS = ExecOptions(backend="device", mesh=None)
+HOST_OPTS = ExecOptions(backend="host")
+
+# base P sits below its power-of-two bucket and the op stream is
+# net-zero per round (appends replace compacted-away deletes), so every
+# op lands in-bucket (the census-flat contract needs stable shape
+# buckets).  Enough rounds that the incremental wall clears
+# check_regression's 0.15 s noise floor.
+BASE_PARTS = 40 if QUICK else (88 if not FULL else 184)
+ROWS = 512 if QUICK else (1024 if not FULL else 2048)
+N_QUERIES = 16 if QUICK else 32
+ROUNDS = 3 if QUICK else 4
+APPEND_PARTS = 2
+
+GATE_BOUND = 0.05
+DELETE_EVERY = 4  # coverage section tombstones every 4th partition
+N_COVERAGE_EXTRA = 12  # extra sampled queries so coverage isn't 8-query noise
+
+
+def _mk(parts, rows, seed=0, layout="sorted"):
+    return make_dataset("tpch", num_partitions=parts, rows_per_partition=rows,
+                        layout=layout, seed=seed)
+
+
+def _lifecycle_stream():
+    """(incremental seconds, warm-up compiles, final state) for the op
+    stream, with census-flat + no-full-rebuild asserts inline."""
+    table = _mk(BASE_PARTS, ROWS)
+    lifecycle.ensure_directory(table)
+    queries = WorkloadSpec(table, seed=77).sample_workload(N_QUERIES)
+    sketches = SketchStore(table, options=DEVICE_OPTS)
+    answers = AnswerStore(table, options=DEVICE_OPTS)
+    answers.get_batch(queries)  # warm: compile + fill the LRU
+    traces0 = _all_traces()
+
+    def sync():
+        sketches.sketches()
+        # answer reads route through per-chunk descriptors, so the device
+        # column stack must be brought current explicitly — its in-bucket
+        # rewrite on slot moves is part of the maintained state (and the
+        # timed cost)
+        answers._eval_cache.device_stack()
+        return answers.get_batch(queries)
+
+    def victims(k):
+        # state-adaptive delete targets: always-live external ids
+        live = sorted(
+            int(e) for i, e in enumerate(table.ext_ids)
+            if i not in table.tombstones
+        )
+        return live[1:1 + k]
+
+    def apply(op):
+        kind = op[0]
+        if kind == "delete":
+            lifecycle.delete_partitions(table, victims(op[1]))
+        elif kind == "append":
+            table_delta = _mk(APPEND_PARTS, ROWS, seed=op[1], layout="random")
+            append_partitions(table, table_delta)
+        elif kind == "compact":
+            lifecycle.compact(table)
+        else:
+            lifecycle.rebalance(table, lifecycle.rebalance_plan(table, op[1]))
+        return sync()
+
+    # warm-up cycle: one op of each kind compiles whatever the lifecycle
+    # plane needs (delta-shape evaluators, the in-bucket stack rewrite's
+    # write shapes) — counted in lifecycle_compiles, excluded from the
+    # timed steps
+    for op in [("delete", 2), ("compact",), ("append", 99), ("rebalance", 2)]:
+        apply(op)
+    compiles = _all_traces() - traces0
+    traces_warm = _all_traces()
+
+    # timed rounds: net-zero partition count (appends replace compacted
+    # deletes), so the live count never leaves the base shape bucket
+    round_ops = [
+        ("delete", 2), ("append", None), ("rebalance", 2),
+        ("delete", 2), ("compact",), ("append", None),
+    ]
+    total, n_ops = 0.0, 0
+    for r in range(ROUNDS):
+        for j, op in enumerate(round_ops):
+            if op[0] == "append":
+                op = ("append", 100 + r * len(round_ops) + j)
+            _, t = _timed(apply, op)
+            total += t
+            n_ops += 1
+    # census-flat contract: after the warm-up cycle, every further
+    # lifecycle op compiles NOTHING — across the eval driver, the ingest
+    # kernels, AND the stack-write path
+    assert _all_traces() == traces_warm, (_all_traces(), traces_warm)
+    # every sync folded its event incrementally; slot moves rewrote the
+    # stack in-bucket instead of dropping it
+    assert sketches.full_rebuilds == 0, sketches.full_rebuilds
+    assert answers._eval_cache.stack_rewrites >= 2 * ROUNDS, \
+        answers._eval_cache.stack_rewrites
+    return total, compiles, n_ops, table, queries, sketches, answers
+
+
+def run():
+    res: dict = {"base_partitions": BASE_PARTS, "rows_per_partition": ROWS,
+                 "queries": N_QUERIES}
+
+    t_incr, compiles, n_ops, table, queries, sketches, answers = \
+        _lifecycle_stream()
+    res["lifecycle_ops"] = n_ops
+
+    # the pre-lifecycle cost of the same stream: full rebuild per op
+    def cold_rebuild():
+        sk = build_sketches(table, options=DEVICE_OPTS)
+        ans = per_partition_answers_batch(
+            table, queries, cache=EvalCache(table, options=DEVICE_OPTS),
+            options=DEVICE_OPTS,
+        )
+        return sk, ans
+    cold_rebuild()  # compile the final-table shapes
+    (cold_sk, cold_ans), t_cold_once = _timed(cold_rebuild)
+    t_cold = t_cold_once * n_ops  # one rebuild per lifecycle op
+
+    # bit-parity of the stream against the cold rebuild (contract, not perf)
+    incr_ans = answers.get_batch(queries)
+    for a, b in zip(incr_ans, cold_ans):
+        assert np.array_equal(a.raw, b.raw)
+    incr_sk = sketches.sketches()
+    for name, cs in cold_sk.columns.items():
+        assert np.array_equal(cs.measures, incr_sk.columns[name].measures)
+
+    res["incr_total_s"] = t_incr
+    res["cold_total_s"] = t_cold
+    res["lifecycle_speedup"] = t_cold / max(t_incr, 1e-9)
+    res["incr_ms_per_op"] = 1e3 * t_incr / n_ops
+    res["cold_ms_per_op"] = 1e3 * t_cold / n_ops
+    # warm-up cycle compiles only; flat afterwards (asserted)
+    res["lifecycle_compiles"] = int(compiles)
+    res["stack_rewrites"] = answers._eval_cache.stack_rewrites
+    res["sketch_updates"] = sketches.incremental_updates
+    res["live_partitions"] = table.num_live
+
+    print(f"[bench_lifecycle] {n_ops} lifecycle ops on {BASE_PARTS}×{ROWS}: "
+          f"incremental {t_incr:.3f}s vs cold rebuild {t_cold:.3f}s "
+          f"(speedup {res['lifecycle_speedup']:.1f}×); census flat, "
+          f"{res['stack_rewrites']} in-bucket stack rewrites")
+
+    # ---- delete-aware planner coverage (host backend) ---------------------
+    ctx = get_context("tpch")
+    ptable = ctx.table
+    lifecycle.ensure_directory(ptable)
+    planner = QueryPlanner(
+        ctx.art.picker, AnswerStore(ptable, options=HOST_OPTS),
+        views=ViewStore(ptable, options=HOST_OPTS),
+    )
+    n = ptable.num_partitions
+    lifecycle.delete_partitions(ptable, list(range(0, n, DELETE_EVERY)))
+    live = np.flatnonzero(ptable.live_mask())
+    # live-only ground truth: after a delete the *correct* answer excludes
+    # the tombstoned mass — coverage is measured against that, not the
+    # pre-delete totals
+    truth_table = Table(
+        ptable.schema,
+        {k: v[live] for k, v in ptable.columns.items()},
+        name=f"{ptable.name}/livetruth",
+    )
+    probes = list(ctx.test_queries) + WorkloadSpec(
+        ptable, seed=4242
+    ).sample_workload(N_COVERAGE_EXTRA)
+    errs, reads = [], []
+    for q in probes:
+        ta = per_partition_answers(truth_table, q, options=HOST_OPTS)
+        if ta.truth().size == 0:
+            continue
+        pa = planner.answer(q, error_bound=GATE_BOUND)
+        errs.append(_rel_err(pa.group_keys, pa.estimate,
+                             ta.group_keys, ta.truth()))
+        reads.append(pa.partitions_read)
+    coverage = float(np.mean([e <= GATE_BOUND for e in errs]))
+    res["deleted_partitions"] = n - int(live.size)
+    res["coverage_queries"] = len(errs)
+    res["lifecycle_coverage"] = coverage
+    res["post_delete_mean_err"] = float(np.mean(errs))
+    res["post_delete_reads"] = int(sum(reads))
+    # contract assert: tombstoned mass left N_h, so the error-bounded
+    # planner still meets its stated bound against live-only truth
+    assert coverage >= 0.9, f"coverage {coverage} < 0.9 at {GATE_BOUND}"
+
+    print(f"[bench_lifecycle] delete-aware planner: {res['deleted_partitions']}"
+          f"/{n} partitions tombstoned, coverage {coverage:.2f} at "
+          f"{GATE_BOUND:.0%} over {len(errs)} queries "
+          f"({res['post_delete_reads']} partitions read)")
+
+    write_result("bench_lifecycle", {"lifecycle": res})
+    return res
+
+
+if __name__ == "__main__":
+    run()

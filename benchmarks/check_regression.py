@@ -53,6 +53,13 @@ GATED = {
     # append_scale is report-only — it compares two separately-warmed runs
     "stream_speedup": ("higher", ("incr_total_s", "cold_total_s")),
     "stream_compiles": ("lower", ()),
+    # bench_lifecycle: incremental delete/compact/rebalance maintenance vs
+    # per-op cold rebuild (within-run ratio) + delete-aware planner
+    # coverage at the 5% bound (also hard-asserted ≥0.9 in-run) + the
+    # deterministic warm-up-cycle compile count
+    "lifecycle_speedup": ("higher", ("incr_total_s", "cold_total_s")),
+    "lifecycle_coverage": ("higher", ()),
+    "lifecycle_compiles": ("lower", ()),
     # bench_planner: all three are count/ratio metrics with no wall-time
     # basis, so they gate on every platform.  reads_vs_uniform and
     # ci_coverage also have hard in-run asserts (≤0.5 / ≥0.9); the gate

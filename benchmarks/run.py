@@ -27,6 +27,7 @@ MODULES = [
     "bench_train",
     "bench_distributed",
     "bench_streaming",
+    "bench_lifecycle",
     "bench_planner",
     "bench_faults",
     "bench_serving_load",

@@ -272,6 +272,33 @@ class Session:
     def execute_batch(self, specs: list[QuerySpec | Query]) -> list[PlannedAnswer]:
         return [self.execute(s) for s in specs]
 
+    # ---- partition lifecycle (see repro.lifecycle) -------------------------
+    def delete_partitions(self, ext_ids) -> list[int]:
+        """Soft-delete partitions by stable external id.  Derived state
+        folds the tombstones in on next access (no rebuild); estimates
+        and CI halfwidths exclude the deleted mass immediately."""
+        from repro import lifecycle
+
+        return lifecycle.delete_partitions(self.table, ext_ids)
+
+    def compact(self):
+        """Reclaim tombstoned slots (survivor gather; O(touched) derived
+        updates on next access).  Returns the surviving physical slots."""
+        from repro import lifecycle
+
+        return lifecycle.compact(self.table)
+
+    def rebalance(self, num_shards: int | None = None, perm=None):
+        """Reshard: apply the canonical ``num_shards`` plan, or an
+        explicit slot permutation.  External ids are unchanged."""
+        from repro import lifecycle
+
+        if (num_shards is None) == (perm is None):
+            raise ValueError("pass exactly one of num_shards= / perm=")
+        if perm is None:
+            perm = lifecycle.rebalance_plan(self.table, num_shards)
+        return lifecycle.rebalance(self.table, perm)
+
     # ---- durability (WAL + snapshot; see repro.wal) ------------------------
     def save(self, directory: str) -> str:
         """Snapshot the table AND all derived state (sketches, answer
@@ -309,6 +336,10 @@ class Session:
             "ema_keys": len(self._rates),
             "answer_ttl_expired": self.answers.ttl_expired,
             "num_partitions": self.table.num_partitions,
+            "num_live": self.table.num_live,
+            "sketch_incremental_updates": self.sketches.incremental_updates,
+            "sketch_full_rebuilds": self.sketches.full_rebuilds,
+            "stack_rewrites": self.answers._eval_cache.stack_rewrites,
             "degraded_answers": self._degraded,
             "partitions_failed": self._partitions_failed,
             "fault_report": None if injector is None else injector.report(),

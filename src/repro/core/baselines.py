@@ -50,7 +50,7 @@ class LSSSampler:
     def pick(self, query: Query, budget: int, seed: int = 0):
         feats = self.fb.features(query)
         sel = self.fb.selectivity(query)
-        candidates = np.flatnonzero(sel[:, 0] > 0)
+        candidates = np.flatnonzero((sel[:, 0] > 0) & self.fb.table.live_mask())
         if candidates.size == 0:
             return np.empty(0, np.int64), np.empty(0)
         budget = int(min(budget, candidates.size))

@@ -130,6 +130,42 @@ def int_span(data: np.ndarray) -> tuple[int, int] | None:
 MAX_DISCRETE_WIDTH = 4096
 
 
+def partition_int_spans(data: np.ndarray) -> np.ndarray:
+    """Per-partition integer spans of a (P, R) numeric column:
+    ``(P, 3) int64`` rows ``[lo, hi, ok]`` where ``ok`` is 1 iff every
+    value in that partition is integral.  This is `int_span` evaluated
+    per partition — the mergeable form the lifecycle plane folds when
+    compaction or rebalancing changes which partitions survive
+    (`fold_partition_spans`)."""
+    p = data.shape[0]
+    out = np.zeros((p, 3), np.int64)
+    if data.size == 0:
+        return out
+    codes = data.astype(np.int64)
+    ok = np.all(data == codes, axis=1)
+    out[:, 0] = np.where(ok, codes.min(axis=1), 0)
+    out[:, 1] = np.where(ok, codes.max(axis=1), 0)
+    out[:, 2] = ok.astype(np.int64)
+    return out
+
+
+def fold_partition_spans(
+    spans: np.ndarray, max_width: int = MAX_DISCRETE_WIDTH
+) -> tuple[int, int] | None:
+    """Fold (P, 3) per-partition spans into the column-level
+    `discrete_span` result — ``(lo, width)`` iff every partition is
+    integral and the union span fits the width cap, else None.  Agrees
+    with `discrete_span` over the concatenated rows by construction, so
+    a gather of surviving partitions can requalify a column exactly as a
+    cold pass over the survivors would."""
+    if spans.shape[0] == 0 or not np.all(spans[:, 2] == 1):
+        return None
+    lo = int(spans[:, 0].min())
+    hi = int(spans[:, 1].max())
+    width = hi - lo + 1
+    return (lo, width) if width <= max_width else None
+
+
 def discrete_span(data: np.ndarray, max_width: int = MAX_DISCRETE_WIDTH) -> tuple[int, int] | None:
     """(lo, width) when a numeric column is integer-valued with a small
     range — the case where exact heavy-hitter counts apply — else None."""

@@ -115,7 +115,9 @@ class PS3Picker:
         if sel is None:
             sel = self.fb.selectivity(query)
         n = feats.shape[0]
-        candidates = np.flatnonzero(sel[:, 0] > 0)
+        # tombstoned partitions never enter the candidate set: deleted
+        # mass must not leak into estimates or stratum populations N_h
+        candidates = np.flatnonzero((sel[:, 0] > 0) & self.table.live_mask())
         if candidates.size == 0:
             return Selection(np.empty(0, np.int64), np.empty(0))
         budget = int(min(budget, candidates.size))

@@ -85,6 +85,12 @@ class ColumnSketch:
     # hitters, None when the column does not qualify — `update_sketches`
     # needs it to merge the span decision without re-reading old partitions
     discrete_span: tuple[int, int] | None = None
+    # (N, 3) int64 [lo, hi, ok] per-partition integer spans (numeric
+    # columns) — the mergeable form `gather_sketches` folds when
+    # compaction drops partitions: a survivor union is a subset of the
+    # old union, so a gather can only *re*-qualify the column, never
+    # disqualify it (docs/lifecycle.md)
+    part_spans: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -392,9 +398,12 @@ def build_sketches(
                 hh_stats = np.zeros((n, 3), np.float64)
                 hh_items = [dict() for _ in range(n)]
                 span = None
+            from repro.core.ingest import partition_int_spans
+
             cols[spec.name] = ColumnSketch(
                 spec.name, NUMERIC, measures, edges, None, ndv, dv_freq,
                 hh_stats, hh_items, None, None, discrete_span=span,
+                part_spans=partition_int_spans(data),
             )
         else:
             card = spec.cardinality
@@ -454,7 +463,12 @@ def update_sketches(
     ``tests/test_streaming_ingest.py`` on 1/2/8-device meshes).  Returns a
     new `TableSketches`; the input is not mutated.
     """
-    from repro.core.ingest import discrete_span, int_span, merge_discrete_span
+    from repro.core.ingest import (
+        discrete_span,
+        int_span,
+        merge_discrete_span,
+        partition_int_spans,
+    )
 
     options = exec_options(options, where="update_sketches",
                            backend=backend, use_ref=use_ref, plane=plane)
@@ -519,12 +533,20 @@ def update_sketches(
                 # touches existing sketch rows
                 hh_stats = np.zeros((n, 3), np.float64)
                 hh_items = [dict() for _ in range(n)]
+            old_spans = (
+                old.part_spans
+                if old.part_spans is not None
+                else partition_int_spans(table.columns[spec.name][:start])
+            )
             cols[spec.name] = ColumnSketch(
                 spec.name, NUMERIC,
                 np.concatenate([old.measures, measures_d], axis=0),
                 np.concatenate([old.hist_edges, edges_d], axis=0),
                 None, ndv, dv_freq, hh_stats, hh_items, None, None,
                 discrete_span=merged_span,
+                part_spans=np.concatenate(
+                    [old_spans, partition_int_spans(data)], axis=0
+                ),
             )
         else:
             if backend == "device":
@@ -549,17 +571,105 @@ def update_sketches(
     return TableSketches(sk.table_name, n, table.rows_per_partition, cols)
 
 
+def gather_sketches(
+    sk: TableSketches, table: Table, idx: np.ndarray
+) -> TableSketches:
+    """Reorder/shrink sketches to partitions ``idx`` (in the numbering
+    ``sk`` covers) — the lifecycle fold for compaction (``idx`` = the
+    surviving slots) and rebalancing (``idx`` = the permutation).
+
+    Every per-partition tensor is a pure function of its partition's
+    rows, so the gather is bitwise what a cold `build_sketches` over the
+    reorganized table computes.  Only the global reductions re-fold:
+
+      * discrete-numeric spans re-fold from `ColumnSketch.part_spans`
+        (`core.ingest.fold_partition_spans`) — a survivor union can only
+        *re*-qualify a column that an earlier append disqualified, in
+        which case exact counts are recomputed from the surviving rows
+        (O(survivors), exactly the cold decision);
+      * categorical global heavy hitters + bitmaps recompute from the
+        gathered count tensors in the gathered partition order, so the
+        float fold order matches the cold pass bit-for-bit.
+
+    ``table`` must already hold the reorganized columns with slots
+    ``[0, len(idx))`` matching ``idx``'s gather (later appends may
+    extend it — they are folded separately).
+    """
+    from repro.core.ingest import fold_partition_spans, partition_int_spans
+
+    idx = np.asarray(idx, dtype=np.int64)
+    n = idx.size
+    cols: dict[str, ColumnSketch] = {}
+    for spec in table.schema:
+        old = sk.columns[spec.name]
+        ndv = old.ndv[idx]
+        dv_freq = old.dv_freq[idx]
+        if spec.kind == NUMERIC:
+            pspans = (
+                old.part_spans[idx]
+                if old.part_spans is not None
+                else partition_int_spans(table.columns[spec.name][:n])
+            )
+            span = fold_partition_spans(pspans)
+            if span is None:
+                hh_stats = np.zeros((n, 3), np.float64)
+                hh_items = [dict() for _ in range(n)]
+                dspan = None
+            elif old.discrete_span is not None:
+                # still qualified: per-partition HH rows are pure
+                # functions of the rows (span-independent), so they ride
+                # the gather; only the recorded union narrows
+                hh_stats = old.hh_stats[idx]
+                hh_items = [old.hh_items[i] for i in idx]
+                dspan = (span[0], span[0] + span[1] - 1)
+            else:
+                # REQUALIFIED: an earlier append blew the span cap, the
+                # survivors fit again — recompute exact counts from the
+                # surviving rows, as the cold pass over them would
+                lo, width = span
+                data = table.columns[spec.name][:n]
+                counts = _partition_bincount(
+                    data.astype(np.int64) - lo, width
+                )
+                hh_stats, items_raw, _, _ = _heavy_hitters_exact(counts)
+                hh_items = [
+                    {k + lo: v for k, v in d.items()} for d in items_raw
+                ]
+                dspan = (lo, lo + width - 1)
+            cols[spec.name] = ColumnSketch(
+                spec.name, NUMERIC, old.measures[idx], old.hist_edges[idx],
+                None, ndv, dv_freq, hh_stats, hh_items, None, None,
+                discrete_span=dspan, part_spans=pspans,
+            )
+        else:
+            counts = old.cat_counts[idx]
+            hh_stats, hh_items, freq, is_hh = _heavy_hitters_exact(counts)
+            bitmap = None
+            ghh = None
+            if spec.groupable:
+                combined = (freq * is_hh).sum(axis=0)
+                k = min(BITMAP_K, spec.cardinality)
+                ghh = np.argsort(-combined, kind="stable")[:k].astype(np.int64)
+                bitmap = is_hh[:, ghh].astype(np.float64)
+            cols[spec.name] = ColumnSketch(
+                spec.name, CATEGORICAL, np.zeros((n, 9)), None, counts,
+                ndv, dv_freq, hh_stats, hh_items, ghh, bitmap,
+            )
+    return TableSketches(sk.table_name, n, table.rows_per_partition, cols)
+
+
 class SketchStore:
     """Version-tracked sketch holder: the streaming plane's sketch cache.
 
     Wraps one table's `TableSketches` and keeps them current across
-    in-place appends: `sketches()` checks `Table.version` and, when the
-    table grew through pure partition appends (`Table.append_range`),
-    updates incrementally via `update_sketches` — O(new partitions) — and
-    only falls back to a full `build_sketches` when the version chain
-    contains a non-append mutation.  ``incremental_updates`` /
-    ``full_rebuilds`` count which path each sync took (`bench_streaming`
-    reads them).
+    in-place mutations: `sketches()` checks `Table.version` and folds the
+    pending `Table.mutation_events` — appends extend via
+    `update_sketches` (O(new partitions)), compaction/rebalancing gather
+    via `gather_sketches` (O(touched)), soft-deletes are free (tombstoned
+    rows keep their sketch rows; consumers filter by `Table.live_mask`).
+    Only an unfoldable chain (`data.table.events_foldable`) falls back to
+    a full `build_sketches`.  ``incremental_updates`` / ``full_rebuilds``
+    count which path each sync took (`bench_streaming` reads them).
     """
 
     def __init__(self, table: Table, backend: str | None = UNSET,
@@ -579,16 +689,31 @@ class SketchStore:
 
     def sketches(self) -> TableSketches:
         """The current table's sketches, incrementally maintained."""
+        from repro.data.table import events_foldable
+
         if self.table.version != self._version:
-            rng = self.table.append_range(self._version)
-            if rng is None:
+            events = self.table.mutation_events(self._version)
+            if events is None or not events_foldable(events):
                 self.full_rebuilds += 1
                 self._sk = build_sketches(self.table, options=self.options)
             else:
                 self.incremental_updates += 1
-                self._sk = update_sketches(
-                    self._sk, self.table, rng[0], options=self.options
-                )
+                for ev in events:
+                    if ev[0] == "append":
+                        # one update covers every remaining append: it
+                        # reads [start:) of the final table, and no move
+                        # event may follow (events_foldable)
+                        if self._sk.num_partitions == ev[1]:
+                            self._sk = update_sketches(
+                                self._sk, self.table, ev[1],
+                                options=self.options,
+                            )
+                    elif ev[0] == "delete":
+                        pass  # tombstoned rows keep their sketch rows
+                    else:  # compact / rebalance: gather
+                        self._sk = gather_sketches(
+                            self._sk, self.table, np.asarray(ev[1])
+                        )
             self._version = self.table.version
         return self._sk
 

@@ -69,6 +69,23 @@ class Table:
     # many appends behind rebuilds — correct, just not incremental), so a
     # long-running streaming server's log cannot grow without bound.
     append_log: dict[int, int] = dataclasses.field(default_factory=dict)
+    # ---- lifecycle plane (repro.lifecycle) ------------------------------
+    # PHYSICAL slot ids of soft-deleted partitions.  Tombstoned rows stay
+    # in `columns` (and in every per-partition derived tensor) but are
+    # excluded from planner/picker candidates, view totals and population
+    # sizes — deleted mass leaves N_h so CIs stay honest.
+    tombstones: set[int] = dataclasses.field(default_factory=set)
+    # stable EXTERNAL partition ids, (num_partitions,) int64, or None
+    # until `lifecycle.ensure_directory` initializes the directory.
+    # External ids survive compaction and rebalancing; physical slots
+    # do not.
+    ext_ids: np.ndarray | None = None
+    next_ext: int = 0
+    # {version: lifecycle event at that version} — mirrors append_log for
+    # the non-append mutations: ("delete", phys_ids, parts_before),
+    # ("compact", keep, parts_before), ("rebalance", perm, parts_before).
+    # Same bound as append_log; `mutation_events` merges the two logs.
+    lifecycle_log: dict[int, tuple] = dataclasses.field(default_factory=dict)
 
     MAX_APPEND_LOG = 1024
 
@@ -88,6 +105,16 @@ class Table:
                 self.columns[spec.name] = col.astype(np.float32)
             if spec.kind == CATEGORICAL and col.dtype != np.int32:
                 self.columns[spec.name] = col.astype(np.int32)
+
+    def __setstate__(self, state):
+        # pickles from before the lifecycle plane (cached bench contexts,
+        # old snapshots) lack the lifecycle fields — backfill defaults so
+        # they unpickle as tables with no tombstones and no directory
+        state.setdefault("tombstones", set())
+        state.setdefault("ext_ids", None)
+        state.setdefault("next_ext", 0)
+        state.setdefault("lifecycle_log", {})
+        self.__dict__.update(state)
 
     # ---- basic geometry -------------------------------------------------
     @property
@@ -119,6 +146,55 @@ class Table:
     @property
     def groupable_columns(self) -> tuple[str, ...]:
         return tuple(s.name for s in self.schema if s.groupable)
+
+    # ---- lifecycle support ----------------------------------------------
+    def live_mask(self) -> np.ndarray:
+        """(num_partitions,) bool — False at tombstoned physical slots."""
+        mask = np.ones(self.num_partitions, dtype=bool)
+        if self.tombstones:
+            mask[sorted(self.tombstones)] = False
+        return mask
+
+    @property
+    def num_live(self) -> int:
+        return self.num_partitions - len(self.tombstones)
+
+    def record_lifecycle(self, event: tuple) -> None:
+        """Log a lifecycle event against the (already bumped) version."""
+        self.lifecycle_log[self.version] = event
+        while len(self.lifecycle_log) > Table.MAX_APPEND_LOG:
+            del self.lifecycle_log[min(self.lifecycle_log)]
+
+    def mutation_events(self, since_version: int) -> list[tuple] | None:
+        """Ordered mutation events covering ``(since_version, version]``.
+
+        Each element is ``("append", old_p, new_p)`` or a lifecycle event
+        as recorded by `record_lifecycle`.  Returns ``None`` (caller must
+        fully rebuild) if any intervening version is missing from both
+        logs — an unlogged bump means an unknown mutation.
+        """
+        if since_version > self.version:
+            return None  # snapshot from the future: not a known chain
+        events: list[tuple] = []
+        appends: list[int] = []  # indices into `events` of append events
+        for v in range(since_version + 1, self.version + 1):
+            if v in self.append_log:
+                appends.append(len(events))
+                events.append(("append", self.append_log[v], -1))
+            elif v in self.lifecycle_log:
+                events.append(self.lifecycle_log[v])
+            else:
+                return None
+        # resolve each append's post-append partition count: the next
+        # event's parts-before, or the current count for the last event
+        for i in appends:
+            if i + 1 < len(events):
+                nxt = events[i + 1]
+                new_p = nxt[1] if nxt[0] == "append" else nxt[2]
+            else:
+                new_p = self.num_partitions
+            events[i] = ("append", events[i][1], new_p)
+        return events
 
     # ---- streaming-ingest support --------------------------------------
     def append_range(self, since_version: int) -> tuple[int, int] | None:
@@ -160,6 +236,15 @@ class Table:
         region its snapshot covers is still the data it fingerprinted.
         """
         fp = []
+        # tombstones are part of the content: a soft-delete changes which
+        # partitions answers may draw from, so caches must see it in the
+        # fingerprint (and NOT mistake it for out-of-band mutation — the
+        # delete itself refreshes their stored fingerprint).  Restricted
+        # fingerprints only see tombstones inside their region.
+        ts = sorted(
+            t for t in self.tombstones if parts is None or t < parts
+        )
+        fp.append(("__tombstones__", tuple(ts)))
         for name in sorted(self.columns):
             c = self.columns[name]
             if parts is not None:
@@ -195,6 +280,27 @@ class Table:
         r = self.num_rows // num_partitions
         cols = {k: v.reshape(num_partitions, r) for k, v in self.columns.items()}
         return Table(self.schema, cols, name=f"{self.name}/p{num_partitions}")
+
+
+def events_foldable(events: list[tuple]) -> bool:
+    """Can a derived-state cache fold this mutation-event chain
+    incrementally, or must it rebuild?
+
+    The folds run in event order against the FINAL table, so any event
+    that reads table *rows* (an append reads the appended region; a
+    compact may re-read survivors to requalify a discrete span) is only
+    valid if no later compact/rebalance relocated those rows.  Deletes
+    are tombstone-only and rebalances are pure gathers of derived
+    tensors — they commute with everything.
+    """
+    moves = {"compact", "rebalance"}
+    seen_move_after = False
+    for ev in reversed(events):
+        if ev[0] in ("append", "compact") and seen_move_after:
+            return False
+        if ev[0] in moves:
+            seen_move_after = True
+    return True
 
 
 def from_flat(schema, columns: Mapping[str, np.ndarray], name: str) -> Table:
@@ -248,6 +354,14 @@ def append_partitions(
     into.append_log[into.version] = old_p
     while len(into.append_log) > Table.MAX_APPEND_LOG:
         del into.append_log[min(into.append_log)]
+    if into.ext_ids is not None:
+        # directory initialized: appended partitions get fresh stable ids
+        delta = into.num_partitions - old_p
+        new_ids = np.arange(
+            into.next_ext, into.next_ext + delta, dtype=np.int64
+        )
+        into.ext_ids = np.concatenate([into.ext_ids, new_ids])
+        into.next_ext += delta
     return into
 
 

@@ -1,0 +1,157 @@
+"""Partition lifecycle plane: soft-delete, compaction, rebalancing.
+
+Streaming ingest (PR 5) only appends; this module adds the rest of the
+lifecycle while preserving the repo's standing contract for mutations —
+every derived structure updates in O(touched partitions), bit-identical
+to a cold rebuild, with a flat compile census:
+
+  * **soft-delete** — `delete_partitions` tombstones physical slots.
+    Rows stay in `Table.columns` (and in every per-partition derived
+    tensor), but the planner and picker drop tombstoned slots from their
+    candidate sets, `ViewStore` totals exclude them, and stratum
+    population sizes shrink accordingly — deleted mass leaves ``N_h`` so
+    confidence intervals stay honest rather than silently covering data
+    that no longer exists.
+  * **compaction** — `compact` reclaims tombstoned slots by gathering
+    the survivors (a pure permutation-free gather: survivors keep their
+    relative order).  Because every per-partition statistic is a pure
+    function of its partition's rows, derived state follows by the same
+    gather; only *global* reductions (categorical heavy-hitter rankings,
+    discrete-span qualification) are re-folded, reusing the PR-5
+    mergeable-statistics primitives — a merged span can only
+    *re*-qualify, never disqualify, since the survivor union is a subset
+    of the previously qualified union.
+  * **rebalancing** — `rebalance` applies an arbitrary slot permutation
+    (`rebalance_plan` builds the canonical one: live partitions
+    round-robin across shards, tombstones packed at the tail) so the
+    mesh survives resharding.  The **partition directory** (`ext_ids`)
+    gives every partition a stable external id that survives both
+    compaction and rebalancing; callers address partitions by external
+    id, never by physical slot.
+
+All three ops bump `Table.version` and record their event in
+`Table.lifecycle_log`; `Table.mutation_events` merges that log with the
+append log so caches can fold an arbitrary interleaving of appends and
+lifecycle events without rebuilding.  Durability rides on `repro.wal`
+(delete/compact/rebalance records, version-keyed replay).  The parity
+contract is enforced by the randomized harness in
+``tests/test_lifecycle.py`` — see docs/lifecycle.md.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.table import Table
+
+__all__ = [
+    "ensure_directory",
+    "resolve",
+    "validate_delete",
+    "delete_partitions",
+    "compact",
+    "rebalance_plan",
+    "rebalance",
+]
+
+
+def ensure_directory(table: Table) -> np.ndarray:
+    """Initialize the partition directory (idempotent): assign stable
+    external ids 0..P-1 to the current physical slots.  Until this runs,
+    the table has no directory and lifecycle ops refuse to start."""
+    if table.ext_ids is None:
+        table.ext_ids = np.arange(table.num_partitions, dtype=np.int64)
+        table.next_ext = table.num_partitions
+    return table.ext_ids
+
+
+def resolve(table: Table, ext_ids) -> np.ndarray:
+    """External partition ids → physical slots (raises on unknown ids)."""
+    directory = ensure_directory(table)
+    ext = np.atleast_1d(np.asarray(ext_ids, dtype=np.int64))
+    order = np.argsort(directory, kind="stable")
+    pos = np.searchsorted(directory, ext, sorter=order)
+    bad = (pos >= directory.size) | (directory[order[np.minimum(pos, directory.size - 1)]] != ext)
+    if bad.any():
+        raise KeyError(f"unknown external partition ids {ext[bad].tolist()}")
+    return order[pos]
+
+
+def validate_delete(table: Table, ext_ids) -> np.ndarray:
+    """All of `delete_partitions`'s checks with none of its effects —
+    the WAL calls this before making a delete record durable, so an
+    invalid request can never poison the log.  Returns physical slots."""
+    phys = resolve(table, ext_ids)
+    if len(set(phys.tolist())) != phys.size:
+        raise ValueError(f"duplicate ids in delete: {np.asarray(ext_ids).tolist()}")
+    already = [int(p) for p in phys if int(p) in table.tombstones]
+    if already:
+        raise ValueError(f"partitions already deleted (physical slots {already})")
+    if len(table.tombstones) + phys.size >= table.num_partitions:
+        raise ValueError("cannot delete the last live partition")
+    return phys
+
+
+def delete_partitions(table: Table, ext_ids) -> list[int]:
+    """Soft-delete partitions by external id; returns the physical slots
+    tombstoned.  Double-deletes raise (the caller addressed a partition
+    that is already gone), unknown ids raise `KeyError`."""
+    phys = validate_delete(table, ext_ids)
+    parts_before = table.num_partitions
+    slots = sorted(int(p) for p in phys)
+    table.tombstones.update(slots)
+    table.version += 1
+    table.record_lifecycle(("delete", tuple(slots), parts_before))
+    return slots
+
+
+def compact(table: Table) -> np.ndarray:
+    """Reclaim tombstoned slots: gather survivors (relative order kept),
+    clear the tombstone set, remap the directory.  Returns ``keep``, the
+    surviving physical slots in their old numbering.  A compact with no
+    tombstones is a legal no-op gather (the version still advances)."""
+    if table.num_live == 0:
+        raise ValueError("cannot compact a table with zero live partitions")
+    parts_before = table.num_partitions
+    keep = np.flatnonzero(table.live_mask())
+    table.columns = {k: v[keep] for k, v in table.columns.items()}
+    if table.ext_ids is not None:
+        table.ext_ids = table.ext_ids[keep]
+    table.tombstones.clear()
+    table.version += 1
+    table.record_lifecycle(("compact", tuple(int(k) for k in keep), parts_before))
+    return keep
+
+
+def rebalance_plan(table: Table, num_shards: int) -> np.ndarray:
+    """Canonical resharding permutation: live partitions dealt
+    round-robin across ``num_shards`` shards (shard 0's slots first),
+    tombstoned slots packed at the tail.  Deterministic — the same table
+    state always produces the same plan."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    live = np.flatnonzero(table.live_mask())
+    dead = np.flatnonzero(~table.live_mask())
+    by_shard = [live[s::num_shards] for s in range(num_shards)]
+    return np.concatenate(by_shard + [dead]).astype(np.int64)
+
+
+def rebalance(table: Table, perm: np.ndarray) -> np.ndarray:
+    """Apply a physical-slot permutation: new slot ``i`` holds what old
+    slot ``perm[i]`` held.  Columns, directory and tombstones all remap;
+    external ids are unchanged (that is the directory's whole point)."""
+    perm = np.asarray(perm, dtype=np.int64)
+    p = table.num_partitions
+    if perm.shape != (p,) or not np.array_equal(np.sort(perm), np.arange(p)):
+        raise ValueError(f"perm must be a permutation of range({p})")
+    parts_before = p
+    table.columns = {k: v[perm] for k, v in table.columns.items()}
+    if table.ext_ids is not None:
+        table.ext_ids = table.ext_ids[perm]
+    if table.tombstones:
+        old = table.tombstones
+        table.tombstones = {
+            int(i) for i in np.flatnonzero(np.isin(perm, sorted(old)))
+        }
+    table.version += 1
+    table.record_lifecycle(("rebalance", tuple(int(i) for i in perm), parts_before))
+    return perm

@@ -239,7 +239,12 @@ class QueryPlanner:
         # 2. candidates (perfect-recall selectivity filter) + must-reads
         sel = self.fb.selectivity(query)
         feats = self.fb.features(query)
-        candidates = np.flatnonzero(sel[:, 0] > 0)
+        # live-mask filter: tombstoned partitions leave the candidate set
+        # (and hence every stratum population N_h), so estimates and CI
+        # halfwidths stay honest after deletes without a rebuild
+        candidates = np.flatnonzero(
+            (sel[:, 0] > 0) & self.fb.table.live_mask()
+        )
         if candidates.size == 0:
             plan = QueryPlan("empty", error_bound, budget, 0, (), 0, 0, (), 0.0)
             return PlannedAnswer(

@@ -43,13 +43,25 @@ from repro.queries.ir import Aggregate, Predicate, Query
 
 @dataclasses.dataclass
 class MaterializedView:
-    """Exact raw totals per group for one (groupby, aggregates) pair."""
+    """Exact raw totals per group for one (groupby, aggregates) pair.
+
+    ``part_raw`` keeps the totals in their per-partition form — (P, Gv,
+    n_raw) over *every physical* partition, tombstoned ones included.
+    ``totals`` is always *derived* from it (`ViewStore._derive_totals`:
+    sum over the live partitions in ascending physical order), never
+    accumulated incrementally: the derivation's float fold order is
+    exactly the cold build's, so view answers stay bit-identical to a
+    from-scratch oracle across any interleaving of appends, deletes,
+    compactions and rebalances — and a soft-delete updates the view by
+    re-deriving, with the deleted mass genuinely gone from the totals.
+    """
 
     groupby: tuple[str, ...]
     aggregates: tuple[Aggregate, ...]
     group_keys: np.ndarray  # (Gv,) mixed-radix codes over `groupby`
-    totals: np.ndarray  # (Gv, n_raw); [:, 0] = exact row count
+    totals: np.ndarray  # (Gv, n_raw); [:, 0] = exact LIVE row count
     plans: list  # _AggPlan per aggregate (raw component mapping)
+    part_raw: np.ndarray | None = None  # (P, Gv, n_raw) physical partitions
 
     def raw_index(self, agg: Aggregate) -> int | None:
         """Raw-component index holding ``agg``'s value sum (0 for count)."""
@@ -107,10 +119,18 @@ class ViewStore:
         return Query(tuple(aggregates), Predicate(), tuple(groupby))
 
     def _materialize(self, groupby, aggregates, table: Table):
+        """(group_keys, per-partition raw) over ``table``'s partitions."""
         ans = per_partition_answers(
             table, self._view_query(groupby, aggregates), options=self.options
         )
-        return ans.group_keys, ans.raw.sum(axis=0)
+        return ans.group_keys, ans.raw
+
+    def _derive_totals(self, part_raw: np.ndarray) -> np.ndarray:
+        """Live totals from per-partition raw: sum over non-tombstoned
+        partitions in ascending physical order — the exact float fold a
+        cold materialization over the same table performs."""
+        live = np.flatnonzero(self.table.live_mask())
+        return part_raw[live].sum(axis=0)
 
     def register(
         self, groupby: tuple[str, ...], aggregates: tuple[Aggregate, ...]
@@ -124,39 +144,76 @@ class ViewStore:
         with self._lock:
             self.refresh()
             plans, _ = plan_aggregates(aggregates)
-            keys, totals = self._materialize(groupby, aggregates, self.table)
-            view = MaterializedView(groupby, aggregates, keys, totals, plans)
+            keys, part_raw = self._materialize(groupby, aggregates, self.table)
+            view = MaterializedView(
+                groupby, aggregates, keys, self._derive_totals(part_raw),
+                plans, part_raw=part_raw,
+            )
             self._views.append(view)
             return view
 
     def refresh(self) -> None:
-        """Fold table growth into every view: O(delta) for pure appends
-        (evaluate only the appended partitions, add the totals), full
-        rebuild for anything else."""
+        """Fold table mutations into every view: O(delta) for appends
+        (evaluate only the appended partitions), O(touched) gathers for
+        compaction/rebalance, a totals re-derivation for soft-deletes;
+        full rebuild only for unfoldable chains."""
         with self._lock:
             self._refresh_locked()
 
     def _refresh_locked(self) -> None:
+        from repro.data.table import events_foldable
+
         if self.table.version == self._version or not self._views:
             self._version = self.table.version
             return
-        rng = self.table.append_range(self._version)
+        events = self.table.mutation_events(self._version)
+        foldable = events is not None and events_foldable(events)
         for i, v in enumerate(self._views):
-            if rng is None:
+            if not foldable or v.part_raw is None:
                 self.full_rebuilds += 1
-                keys, totals = self._materialize(v.groupby, v.aggregates, self.table)
+                keys, part_raw = self._materialize(
+                    v.groupby, v.aggregates, self.table
+                )
             else:
                 self.incremental_updates += 1
-                t = self.table
-                cols = {k: c[rng[0]:] for k, c in t.columns.items()}
-                delta = Table(t.schema, cols, name=f"{t.name}/viewdelta")
-                dk, dt = self._materialize(v.groupby, v.aggregates, delta)
-                keys = np.union1d(v.group_keys, dk)
-                totals = np.zeros((keys.shape[0], v.totals.shape[1]))
-                totals[np.searchsorted(keys, v.group_keys)] += v.totals
-                totals[np.searchsorted(keys, dk)] += dt
+                keys, part_raw = v.group_keys, v.part_raw
+                for ev in events:
+                    if ev[0] == "delete":
+                        continue  # totals re-derive below; raw rows stand
+                    if ev[0] == "append":
+                        if ev[1] != part_raw.shape[0]:
+                            continue  # earlier fold already read past it
+                        t = self.table
+                        cols = {k: c[ev[1]:] for k, c in t.columns.items()}
+                        delta = Table(
+                            t.schema, cols, name=f"{t.name}/viewdelta"
+                        )
+                        dk, draw = self._materialize(
+                            v.groupby, v.aggregates, delta
+                        )
+                        merged = np.union1d(keys, dk)
+                        pr = np.zeros(
+                            (t.num_partitions, merged.shape[0],
+                             part_raw.shape[2])
+                        )
+                        pr[: part_raw.shape[0],
+                           np.searchsorted(merged, keys)] = part_raw
+                        pr[part_raw.shape[0]:,
+                           np.searchsorted(merged, dk)] = draw
+                        keys, part_raw = merged, pr
+                    elif ev[0] == "compact":
+                        pr = part_raw[np.asarray(ev[1])]
+                        # survivors-only occupancy: a group whose mass
+                        # lived only in dropped slots disappears, as the
+                        # cold materialization would decide (counts are
+                        # integers in float64 — the sum test is exact)
+                        occ = np.flatnonzero(pr[:, :, 0].sum(axis=0) > 0)
+                        keys, part_raw = keys[occ], pr[:, occ, :]
+                    else:  # rebalance: pure gather, occupancy unchanged
+                        part_raw = part_raw[np.asarray(ev[1])]
             self._views[i] = dataclasses.replace(
-                v, group_keys=keys, totals=totals
+                v, group_keys=keys, totals=self._derive_totals(part_raw),
+                part_raw=part_raw,
             )
         self._version = self.table.version
 

@@ -291,6 +291,7 @@ class EvalCache:
         self.cast_builds = 0
         self.stack_appends = 0  # in-place slack writes (streaming appends)
         self.stack_rebuilds = 0  # full stack (re)builds incl. overflows
+        self.stack_rewrites = 0  # in-bucket rewrites (compaction/rebalance)
 
     # the fingerprint guard costs ~1-2 µs/column, so hot accessors only
     # re-verify every Nth sync; public batch entries (AnswerStore._sync,
@@ -328,47 +329,74 @@ class EvalCache:
             self._sync_locked()
 
     def _sync_locked(self) -> None:
+        from repro.data.table import events_foldable
+
         if self.table.version == self._version:
             self._fp_tick += 1
             if self._fp_tick >= self.FP_CHECK_EVERY:
                 self._check_fingerprint_locked()
             return
-        rng = self.table.append_range(self._version)
-        if rng is not None and self.table.fingerprint(rng[0]) != self._fp:
-            # the append chain is genuine, but the PRE-append region no
-            # longer matches our snapshot: an out-of-band mutation hid
-            # behind the append's version bump — carrying answers or the
-            # grown stack would serve stale data for the mutated rows
-            raise StaleStateError(
-                f"table {self.table.name!r}: pre-append partitions changed "
-                "outside the append API (out-of-band mutation before "
-                "append_partitions?); caches cannot update incrementally "
-                "from this snapshot"
-            )
+        events = self.table.mutation_events(self._version)
+        foldable = events is not None and events_foldable(events)
+        if foldable and events and all(ev[0] == "append" for ev in events):
+            # pure append chain: the PRE-append region must still match
+            # our snapshot, or an out-of-band mutation hid behind the
+            # append's version bump — carrying answers or the grown stack
+            # would serve stale data for the mutated rows.  (Chains with
+            # lifecycle events skip this check: a delete changes the
+            # restricted fingerprint's tombstone component by design, and
+            # the refreshed fingerprint below re-arms the guard.)
+            if self.table.fingerprint(events[0][1]) != self._fp:
+                raise StaleStateError(
+                    f"table {self.table.name!r}: pre-append partitions "
+                    "changed outside the append API (out-of-band mutation "
+                    "before append_partitions?); caches cannot update "
+                    "incrementally from this snapshot"
+                )
         self._codes.clear()
         self._segs.clear()
         self._f64.clear()
         self._f32.clear()
         self._proj.clear()
-        if rng is None:
+        if not foldable:
             self._posinf.clear()
             self._nonfinite.clear()
             self._stack = None
             self._stack_p = 0
         else:
-            start = rng[0]
-            # the non-finiteness flags route queries between backends:
-            # extend them with a delta-only scan instead of a full re-scan
-            for col in list(self._posinf):
-                self._posinf[col] = self._posinf[col] or bool(
-                    np.isposinf(self.table.columns[col][start:]).any()
-                )
-            for col in list(self._nonfinite):
-                self._nonfinite[col] = self._nonfinite[col] or not bool(
-                    np.isfinite(self.table.columns[col][start:]).all()
-                )
-            if self._stack is not None:
-                self._grow_stack()
+            covered = None  # final-P coverage once an append fold ran
+            for ev in events:
+                if ev[0] == "delete":
+                    # tombstone-only: columns, flags and the stack are
+                    # untouched (tombstoned rows still evaluate; the
+                    # planner filters them from candidates)
+                    continue
+                if ev[0] == "compact":
+                    # survivors may lose the rows that made a column
+                    # non-finite: recompute the routing flags lazily
+                    self._posinf.clear()
+                    self._nonfinite.clear()
+                    self._rewrite_stack()
+                elif ev[0] == "rebalance":
+                    # flags are permutation-invariant; the stack is not
+                    self._rewrite_stack()
+                else:  # append
+                    start = ev[1]
+                    if covered is not None and start < covered:
+                        continue  # an earlier fold already read past it
+                    # the non-finiteness flags route queries between
+                    # backends: extend them with a delta-only scan
+                    for col in list(self._posinf):
+                        self._posinf[col] = self._posinf[col] or bool(
+                            np.isposinf(self.table.columns[col][start:]).any()
+                        )
+                    for col in list(self._nonfinite):
+                        self._nonfinite[col] = self._nonfinite[col] or not bool(
+                            np.isfinite(self.table.columns[col][start:]).all()
+                        )
+                    if self._stack is not None:
+                        self._grow_stack()
+                    covered = self.table.num_partitions
         self._version = self.table.version
         self._fp = self.table.fingerprint()
         self._fp_tick = 0
@@ -473,6 +501,36 @@ class EvalCache:
         )
         self._stack_p = n
         self.stack_appends += 1
+
+    def _rewrite_stack(self) -> None:
+        """Rewrite the device stack in place after compaction/rebalance:
+        one bucketed write of the reorganized columns through the same
+        slack-write path appends use (`dataplane.write_partitions`), plus
+        zero-fill over any now-dead tail so padded partitions can never
+        contribute.  Keeps the existing shape bucket — every executable
+        compiled against it stays valid, so the census stays flat; only a
+        table that *grew* past the bucket drops the stack for a re-pad."""
+        from repro.distributed import dataplane
+
+        if self._stack is None:
+            return
+        n = self.table.num_partitions
+        if n > self._stack.shape[1]:
+            self._stack = None
+            self._stack_p = 0
+            return
+        cover = max(self._stack_p, n)  # stale tail to zero out
+        delta = self._host_stack(0, n)
+        if cover > n:
+            pad = np.zeros(
+                (delta.shape[0], cover - n, delta.shape[2]), np.float32
+            )
+            delta = np.concatenate([delta, pad], axis=1)
+        self._stack = dataplane.write_partitions(
+            self._stack, delta, 0, axis=1, plane=self.plane
+        )
+        self._stack_p = n
+        self.stack_rewrites += 1
 
     def device_stack(self) -> jax.Array:
         """(n_cols+1, P_bucket, R) float32 column stack, resident on device.
@@ -636,6 +694,8 @@ class AnswerStore:
         return True
 
     def _sync(self) -> None:
+        from repro.data.table import events_foldable
+
         # delegate first: raises on out-of-band mutation (fingerprint,
         # forced at this batch boundary) and grows/drops the device stack
         # — even on an all-hits batch that never touches the eval cache
@@ -643,17 +703,63 @@ class AnswerStore:
         self._eval_cache.check_fingerprint()
         if self.table.version == self._version:
             return
-        rng = self.table.append_range(self._version)
-        if rng is None or not self._delta_backend_safe(rng[0]):
+        events = self.table.mutation_events(self._version)
+        foldable = events is not None and events_foldable(events)
+        if foldable:
+            for ev in events:
+                if ev[0] == "append" and not self._delta_backend_safe(ev[1]):
+                    foldable = False  # append can flip device routing
+                    break
+        if not foldable:
             self._cache.clear()
             self._partial.clear()
             self._born.clear()
             self._partial_born.clear()
+        else:
+            for ev in events:
+                if ev[0] == "delete":
+                    # tombstones filter at the planner; per-partition raw
+                    # rows (incl. the tombstoned ones) stay row-local valid
+                    continue
+                if ev[0] == "append":
+                    # merged lazily on access: each entry's raw partition
+                    # count records where its delta evaluation must start
+                    continue
+                self._fold_move(ev)
         self._version = self.table.version
         self._delta_caches.clear()  # delta views are per-version snapshots
-        # surviving entries are merged lazily on access: their raw tensors
-        # still have the pre-append partition count, which records exactly
-        # where each entry's delta evaluation must start
+
+    def _fold_move(self, ev: tuple) -> None:
+        """Fold a compact/rebalance event into the held answers: gather
+        each full entry's row-local raw tensor by the event's index map
+        (compaction additionally re-filters occupied groups — a group
+        whose only mass lived in dropped partitions disappears, exactly
+        as `_answers_from_raw` would decide on the reorganized table).
+        Entries whose partition count predates the event (append-stale
+        across a move) and all partial answers are dropped — their
+        partition ids no longer name the same data."""
+        idx = np.asarray(ev[1], dtype=np.int64)
+        parts_before = ev[2]
+        kept: dict[str, PartitionAnswers] = {}
+        for key, ans in self._cache.items():
+            if ans.raw.shape[0] != parts_before:
+                continue
+            raw = ans.raw[idx]
+            if ev[0] == "compact":
+                # integer counts in float64: the occupancy sum is exact
+                occ = np.flatnonzero(raw[:, :, 0].sum(axis=0) > 0)
+                kept[key] = PartitionAnswers(
+                    ans.query, ans.group_keys[occ], raw[:, occ, :], ans.plans
+                )
+            else:
+                kept[key] = PartitionAnswers(
+                    ans.query, ans.group_keys, raw, ans.plans
+                )
+        for key in set(self._cache) - set(kept):
+            self._born.pop(key, None)
+        self._cache = kept
+        self._partial.clear()
+        self._partial_born.clear()
 
     def _expired(self, born: float | None) -> bool:
         """Whether an entry inserted at ``born`` is past the max-age.

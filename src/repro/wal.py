@@ -3,15 +3,19 @@ derived state, so a crash mid-append recovers bit-identically.
 
 Two cooperating pieces (see docs/robustness.md):
 
-* **`WriteAheadLog`** — the append log.  `append(table, delta)` makes
+* **`WriteAheadLog`** — the mutation log.  `append(table, delta)` makes
   the delta *durable before it is applied*: the delta columns land in an
   ``.npz`` record (written to a temp file and `os.replace`d — a record
   exists iff its rename happened), then a JSON sidecar with the record's
-  sha256 and the pre-append partition count, then the in-memory
-  `append_partitions`.  Replay is idempotent by construction: a record
-  applies iff its ``parts_before`` matches the table's current partition
-  count, so recovering from *any* crash point lands on a consistent
-  pre- or post-append state — never a torn one.
+  sha256 and the pre-mutation version, then the in-memory
+  `append_partitions`.  `delete`/`compact`/`rebalance` follow the same
+  durable-then-apply protocol for lifecycle mutations (see
+  `repro.lifecycle` and docs/lifecycle.md).  Replay is idempotent by
+  construction and keyed on the table *version* (partition counts can
+  shrink under deletes/compaction, versions only grow): a record applies
+  iff its ``version_before`` matches the table's current version, so
+  recovering from *any* crash point lands on a consistent pre- or
+  post-mutation state — never a torn one.
 
 * **Snapshots** — `save_snapshot(session, dir)` persists the table
   (columns, version, append log) plus every piece of derived state the
@@ -117,12 +121,11 @@ class WriteAheadLog:
         stem = os.path.join(self.directory, f"{rec_id:08d}")
         return stem + ".npz", stem + ".json"
 
-    # ---- the append path ---------------------------------------------------
-    def append(self, table: Table, delta: dict) -> Table:
-        """Durable-then-apply: WAL record first, `append_partitions` second."""
-        crash_point(self.injector, "wal.record")
-        delta = {k: np.asarray(v) for k, v in delta.items()}
-        payload = _npz_bytes(delta)
+    def _write_record(self, arrays: dict, rtype: str, table: Table) -> None:
+        """Durable record: payload ``.npz`` first, then the JSON sidecar
+        carrying its sha256 plus the pre-mutation version/partition count
+        the record must find at apply time."""
+        payload = _npz_bytes(arrays)
         ids = self._record_ids()
         rec_id = (ids[-1] + 1) if ids else 0
         npz_path, meta_path = self._paths(rec_id)
@@ -130,23 +133,83 @@ class WriteAheadLog:
         meta = {
             "format": _FORMAT,
             "record": rec_id,
+            "type": rtype,
             "parts_before": table.num_partitions,
             "version_before": table.version,
             "sha256": _sha256(payload),
         }
         _write_atomic(meta_path, json.dumps(meta).encode())
+
+    # ---- the append path ---------------------------------------------------
+    def append(self, table: Table, delta: dict) -> Table:
+        """Durable-then-apply: WAL record first, `append_partitions` second."""
+        crash_point(self.injector, "wal.record")
+        delta = {k: np.asarray(v) for k, v in delta.items()}
+        self._write_record(delta, "append", table)
         crash_point(self.injector, "wal.apply")
         append_partitions(table, delta)
         crash_point(self.injector, "wal.derived")
         return table
 
+    # ---- the lifecycle paths (delete / compact / rebalance) ----------------
+    def delete(self, table: Table, ext_ids) -> list[int]:
+        """Durable-then-apply soft delete.  The request is fully validated
+        *before* the record is written so an invalid delete can never
+        poison the log; same crash points as `append`."""
+        from repro import lifecycle
+
+        ext = np.atleast_1d(np.asarray(ext_ids, dtype=np.int64))
+        lifecycle.validate_delete(table, ext)
+        crash_point(self.injector, "wal.record")
+        self._write_record({"ext_ids": ext}, "delete", table)
+        crash_point(self.injector, "wal.apply")
+        slots = lifecycle.delete_partitions(table, ext)
+        crash_point(self.injector, "wal.derived")
+        return slots
+
+    def compact(self, table: Table) -> np.ndarray:
+        """Durable-then-apply compaction.  The record is payload-free: the
+        survivor set is derived from the tombstones found at apply time,
+        which version-keyed replay guarantees match the recording state."""
+        from repro import lifecycle
+
+        if table.num_live == 0:
+            raise ValueError("cannot compact a table with zero live partitions")
+        crash_point(self.injector, "wal.record")
+        self._write_record({}, "compact", table)
+        crash_point(self.injector, "wal.apply")
+        keep = lifecycle.compact(table)
+        crash_point(self.injector, "wal.derived")
+        return keep
+
+    def rebalance(self, table: Table, perm) -> np.ndarray:
+        """Durable-then-apply slot permutation (see `lifecycle.rebalance`)."""
+        from repro import lifecycle
+
+        perm = np.asarray(perm, dtype=np.int64)
+        p = table.num_partitions
+        if perm.shape != (p,) or not np.array_equal(np.sort(perm), np.arange(p)):
+            raise ValueError(f"perm must be a permutation of range({p})")
+        crash_point(self.injector, "wal.record")
+        self._write_record({"perm": perm}, "rebalance", table)
+        crash_point(self.injector, "wal.apply")
+        lifecycle.rebalance(table, perm)
+        crash_point(self.injector, "wal.derived")
+        return perm
+
     # ---- recovery ----------------------------------------------------------
     def replay(self, table: Table) -> int:
         """Apply every record the table has not seen; → records applied.
 
-        Idempotent: a record whose ``parts_before`` is behind the table's
-        partition count already applied before the crash and is skipped;
-        one *ahead* of it means a missing record — `WalCorruptError`."""
+        Idempotent, and keyed on the table *version* rather than the
+        partition count: deletes and compaction can shrink (or preserve)
+        the partition count, so ``parts_before`` no longer identifies a
+        record's place in the mutation sequence — the monotonically
+        increasing version does.  A record whose ``version_before`` is
+        behind the table's version already applied before the crash and
+        is skipped; one *ahead* of it means a missing record —
+        `WalCorruptError`.  ``parts_before`` is kept as a cross-check on
+        append records."""
         applied = 0
         for rec_id in self._record_ids():
             npz_path, meta_path = self._paths(rec_id)
@@ -154,21 +217,44 @@ class WriteAheadLog:
                 meta = json.loads(open(meta_path, "rb").read())
             except (OSError, ValueError) as e:
                 raise WalCorruptError(f"WAL record {rec_id}: bad sidecar: {e}") from e
-            delta_p = None
-            if meta["parts_before"] < table.num_partitions:
+            ver = meta["version_before"]
+            if ver < table.version:
                 continue  # applied before the crash
-            if meta["parts_before"] > table.num_partitions:
+            if ver > table.version:
                 raise WalCorruptError(
-                    f"WAL record {rec_id} expects {meta['parts_before']} "
-                    f"partitions but the table has {table.num_partitions}: "
-                    "a preceding record is missing"
+                    f"WAL record {rec_id} expects table version {ver} but "
+                    f"the table is at {table.version}: a preceding record "
+                    "is missing"
                 )
+            rtype = meta.get("type", "append")
             payload = _read_verified(
                 npz_path, meta["sha256"], f"WAL record {rec_id}"
             )
             with np.load(io.BytesIO(payload)) as z:
-                delta_p = {k: z[k] for k in z.files}
-            append_partitions(table, delta_p)
+                arrays = {k: z[k] for k in z.files}
+            if rtype == "append":
+                if meta["parts_before"] != table.num_partitions:
+                    raise WalCorruptError(
+                        f"WAL record {rec_id} expects {meta['parts_before']} "
+                        f"partitions but the table has {table.num_partitions}"
+                    )
+                append_partitions(table, arrays)
+            elif rtype == "delete":
+                from repro import lifecycle
+
+                lifecycle.delete_partitions(table, arrays["ext_ids"])
+            elif rtype == "compact":
+                from repro import lifecycle
+
+                lifecycle.compact(table)
+            elif rtype == "rebalance":
+                from repro import lifecycle
+
+                lifecycle.rebalance(table, arrays["perm"])
+            else:
+                raise WalCorruptError(
+                    f"WAL record {rec_id}: unknown record type {rtype!r}"
+                )
             applied += 1
         return applied
 
@@ -230,6 +316,19 @@ def save_snapshot(session, directory: str,
         "append_log": {str(k): v for k, v in table.append_log.items()},
         "num_partitions": table.num_partitions,
         "schema": [dataclasses.asdict(s) for s in table.schema],
+        # lifecycle state: tombstones, the partition directory, and the
+        # lifecycle event log (mirrors append_log for delete/compact/
+        # rebalance so restored caches can fold instead of rebuilding)
+        "tombstones": sorted(int(t) for t in table.tombstones),
+        "ext_ids": (
+            None if table.ext_ids is None
+            else [int(i) for i in table.ext_ids]
+        ),
+        "next_ext": int(table.next_ext),
+        "lifecycle_log": {
+            str(k): [v[0], list(v[1]), int(v[2])]
+            for k, v in table.lifecycle_log.items()
+        },
     }
     meta_bytes = json.dumps(meta).encode()
     _write_atomic(os.path.join(directory, "meta.json"), meta_bytes)
@@ -266,10 +365,20 @@ def load_table(directory: str) -> Table:
     with np.load(io.BytesIO(table_bytes)) as z:
         columns = {k: z[k] for k in z.files}
     schema = tuple(ColumnSpec(**s) for s in meta["schema"])
-    return Table(
+    table = Table(
         schema, columns, name=meta["name"], version=meta["version"],
         append_log={int(k): v for k, v in meta["append_log"].items()},
+        tombstones={int(t) for t in meta.get("tombstones", [])},
+        next_ext=int(meta.get("next_ext", 0)),
+        lifecycle_log={
+            int(k): (v[0], tuple(v[1]), int(v[2]))
+            for k, v in meta.get("lifecycle_log", {}).items()
+        },
     )
+    ext = meta.get("ext_ids")
+    if ext is not None:
+        table.ext_ids = np.asarray(ext, dtype=np.int64)
+    return table
 
 
 def _load_derived(directory: str) -> dict:

@@ -1,0 +1,337 @@
+"""Randomized lifecycle-parity state machine (library for test_lifecycle).
+
+The machine drives a live `Session` through bounded random sequences of
+``append / delete / compact / rebalance / snapshot / crash-restore``
+operations (every mutation goes through the WAL, so crash-restore can
+recover at any point), and after EVERY step answers a planner query both
+ways:
+
+  * **live** — through the session's incrementally-folded derived state;
+  * **oracle** — through a from-scratch planner: fresh sketches, fresh
+    answer store, fresh views, all built cold on the *same* physical
+    table + tombstones + directory, reusing the same trained funnel and
+    cluster mask (training is workload-level state, not derived state).
+
+Estimates, group keys and CI halfwidths must be **byte-equal** and the
+partitions-read count identical — that is the parity contract the
+lifecycle plane promises (docs/lifecycle.md).
+
+Operations are *concrete but state-adaptive*: an op tuple carries only
+seeds/fractions, and its effect is a deterministic function of the table
+state it meets, so replaying a prefix of a failing sequence is exact.
+That makes shrinking sound: `shrink` is a ddmin-lite pass (drop chunks,
+then singles) that re-runs candidate subsequences from scratch and keeps
+any removal that still fails, printing a minimal reproducer.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import os
+
+import numpy as np
+
+from repro import lifecycle, wal
+from repro.api import ExecOptions, QuerySpec, Session
+from repro.core.features import FeatureBuilder
+from repro.core.picker import PickerConfig, PS3Picker, train_picker
+from repro.core.sketches import build_sketches
+from repro.data.datasets import make_dataset
+from repro.errors import InjectedCrash
+from repro.faults import FaultInjector, FaultPolicy
+from repro.planner import QueryPlanner, ViewStore
+from repro.queries.engine import AnswerStore
+from repro.queries.generator import WorkloadSpec
+
+CRASH_POINTS = ("wal.record", "wal.apply", "wal.derived")
+
+# mutation op kinds the generator draws from (weights favor the ops that
+# stress folding; snapshot/crash are rarer because they are expensive)
+_OP_KINDS = (
+    "append", "append", "delete", "delete", "delete",
+    "compact", "rebalance", "snapshot", "crash",
+)
+
+
+class ParityError(AssertionError):
+    """A live answer diverged from the cold-rebuild oracle."""
+
+
+@dataclasses.dataclass
+class SharedArtifacts:
+    """Expensive once-per-module state shared across every sequence:
+    the base table layout and one trained picker (funnel + mask)."""
+
+    base_table_ctor: object  # () -> Table (fresh deep-copyable base)
+    funnel: object
+    cluster_mask: np.ndarray
+    picker_config: PickerConfig
+    queries: list
+    view_spec: tuple  # (groupby, aggregates)
+
+
+def build_shared(
+    options: ExecOptions,
+    *,
+    parts: int = 10,
+    rows: int = 48,
+    seed: int = 0,
+    num_queries: int = 6,
+) -> SharedArtifacts:
+    table = make_dataset(
+        "kdd", num_partitions=parts, rows_per_partition=rows, seed=seed
+    )
+    cfg = PickerConfig(num_trees=8, tree_depth=3, feature_selection=False)
+    art = train_picker(
+        table, WorkloadSpec(table, seed=1), num_train_queries=8,
+        config=cfg, options=options,
+    )
+    queries = WorkloadSpec(table, seed=seed + 77).sample_workload(num_queries)
+    ctor = lambda: copy.deepcopy(table)
+    return SharedArtifacts(
+        base_table_ctor=ctor,
+        funnel=art.picker.funnel,
+        cluster_mask=art.picker.cluster_mask,
+        picker_config=cfg,
+        queries=queries,
+        view_spec=(queries[0].groupby or ("protocol_type",), queries[0].aggregates),
+    )
+
+
+# --------------------------------------------------------------------------
+# op generation (concrete tuples; deterministic effect given table state)
+# --------------------------------------------------------------------------
+def ops_from_seed(seed: int, n_ops: int) -> list[tuple]:
+    rng = np.random.default_rng(seed)
+    ops: list[tuple] = []
+    for _ in range(n_ops):
+        kind = _OP_KINDS[int(rng.integers(len(_OP_KINDS)))]
+        if kind == "append":
+            ops.append(("append", int(rng.integers(1, 4)), int(rng.integers(1 << 20))))
+        elif kind == "delete":
+            ops.append(("delete", float(rng.random()), int(rng.integers(1, 3))))
+        elif kind == "compact":
+            ops.append(("compact",))
+        elif kind == "rebalance":
+            ops.append(("rebalance", int(rng.integers(1, 5))))
+        elif kind == "snapshot":
+            ops.append(("snapshot",))
+        else:  # crash: an inner mutation + the point it dies at
+            inner = ("append", "delete", "compact", "rebalance")[
+                int(rng.integers(4))
+            ]
+            point = CRASH_POINTS[int(rng.integers(len(CRASH_POINTS)))]
+            ops.append(("crash", inner, point, int(rng.integers(1 << 20))))
+    return ops
+
+
+def _append_delta(machine_seed: int, parts: int, rows: int) -> dict:
+    d = make_dataset(
+        "kdd", num_partitions=parts, rows_per_partition=rows,
+        seed=100_000 + machine_seed,
+    )
+    return dict(d.columns)
+
+
+# --------------------------------------------------------------------------
+# the machine
+# --------------------------------------------------------------------------
+class LifecycleMachine:
+    def __init__(self, shared: SharedArtifacts, options: ExecOptions,
+                 dirpath: str, *, queries_per_step: int = 1):
+        self.shared = shared
+        self.options = options
+        self.dir = dirpath
+        self.queries_per_step = queries_per_step
+        table = shared.base_table_ctor()
+        lifecycle.ensure_directory(table)
+        self.rows = table.rows_per_partition
+        self.sess = Session(table, options=options)
+        self._graft(self.sess)
+        self.sess.register_view(*shared.view_spec)
+        self.sess.save(os.path.join(dirpath, "snapshot"))
+        self.log = wal.WriteAheadLog(os.path.join(dirpath, "wal"))
+        self.steps = 0
+
+    def _graft(self, sess: Session) -> None:
+        """Install the shared trained picker over this session's table."""
+        fb = FeatureBuilder(sess.table, sess.sketches.sketches())
+        sess.picker = PS3Picker(
+            sess.table, fb, self.shared.funnel, self.shared.cluster_mask,
+            self.shared.picker_config,
+        )
+        sess.planner = QueryPlanner(
+            sess.picker, sess.answers, views=sess.views,
+            config=sess.planner_config,
+        )
+        sess._fb_version = sess.table.version
+
+    # ---- deterministic state-adaptive op application ----------------------
+    def _delete_targets(self, frac: float, count: int) -> np.ndarray | None:
+        t = self.sess.table
+        live_ext = np.sort(t.ext_ids[t.live_mask()])
+        if live_ext.size <= count:  # never delete the last live partition
+            return None
+        start = int(frac * live_ext.size) % live_ext.size
+        idx = (start + np.arange(count)) % live_ext.size
+        return live_ext[np.unique(idx)]
+
+    def _apply_mutation(self, log: wal.WriteAheadLog, op: tuple) -> bool:
+        """Apply one mutation through `log`; False = deterministic skip."""
+        t = self.sess.table
+        if op[0] == "append":
+            log.append(t, _append_delta(op[2], op[1], self.rows))
+        elif op[0] == "delete":
+            targets = self._delete_targets(op[1], op[2])
+            if targets is None:
+                return False
+            log.delete(t, targets)
+        elif op[0] == "compact":
+            log.compact(t)
+        elif op[0] == "rebalance":
+            log.rebalance(t, lifecycle.rebalance_plan(t, op[1]))
+        else:
+            raise AssertionError(f"not a mutation: {op!r}")
+        return True
+
+    def apply(self, op: tuple) -> None:
+        if op[0] == "snapshot":
+            self.sess.save(os.path.join(self.dir, "snapshot"))
+            self.log.truncate()
+        elif op[0] == "crash":
+            inner = (op[1],) if op[1] in ("compact",) else {
+                "append": ("append", 1, op[3]),
+                "delete": ("delete", (op[3] % 97) / 97.0, 1),
+                "rebalance": ("rebalance", 1 + op[3] % 4),
+            }.get(op[1], (op[1],))
+            injected = wal.WriteAheadLog(
+                os.path.join(self.dir, "wal"),
+                injector=FaultInjector(FaultPolicy(seed=op[3]).with_crash(op[2])),
+            )
+            try:
+                self._apply_mutation(injected, inner)
+            except InjectedCrash:
+                pass  # the "process" died; recover below
+            self.sess = wal.recover(self.dir, options=self.options)
+            self.log = wal.WriteAheadLog(os.path.join(self.dir, "wal"))
+        else:
+            self._apply_mutation(self.log, op)
+        self.steps += 1
+
+    # ---- parity check ------------------------------------------------------
+    def _oracle(self) -> QueryPlanner:
+        """From-scratch planner on the session's current physical state."""
+        t = self.sess.table
+        fb = FeatureBuilder(t, build_sketches(t, options=self.options))
+        picker = PS3Picker(
+            t, fb, self.shared.funnel, self.shared.cluster_mask,
+            self.shared.picker_config,
+        )
+        answers = AnswerStore(t, options=self.options)
+        views = ViewStore(t, options=self.options)
+        for v in self.sess.views._views:
+            views.register(v.groupby, v.aggregates)
+        return QueryPlanner(
+            picker, answers, views=views, config=self.sess.planner_config
+        )
+
+    def check(self, tag: str = "") -> None:
+        """Answer queries live and cold; any divergence — byte-level or a
+        crash on either path — is a `ParityError` (so the shrinker can
+        minimize crashes exactly like silent divergences)."""
+        try:
+            self._check(tag)
+        except ParityError:
+            raise
+        except Exception as e:
+            raise ParityError(
+                f"{tag}: query path raised {type(e).__name__}: {e}"
+            ) from e
+
+    def _check(self, tag: str) -> None:
+        pool = self.shared.queries
+        oracle = self._oracle()
+        for j in range(self.queries_per_step):
+            q = pool[(self.steps + j) % len(pool)]
+            live = self.sess.execute(QuerySpec(q, error_bound=0.05))
+            cold = oracle.answer(q, error_bound=0.05)
+            for field in ("group_keys", "estimate", "ci_halfwidth"):
+                a = getattr(live, field)
+                b = getattr(cold, field)
+                if a.tobytes() != b.tobytes():
+                    raise ParityError(
+                        f"{tag}: {field} diverged from the cold oracle "
+                        f"(query #{(self.steps + j) % len(pool)})\n"
+                        f"live: {a!r}\ncold: {b!r}"
+                    )
+            if live.partitions_read != cold.partitions_read:
+                raise ParityError(
+                    f"{tag}: partitions_read {live.partitions_read} != "
+                    f"oracle {cold.partitions_read}"
+                )
+
+
+# --------------------------------------------------------------------------
+# sequence runner + shrinker
+# --------------------------------------------------------------------------
+def run_sequence(shared: SharedArtifacts, ops: list[tuple],
+                 options: ExecOptions, dirpath: str,
+                 *, check_every_step: bool = True) -> LifecycleMachine:
+    """Run `ops` on a fresh machine, parity-checking after every step.
+    Raises `ParityError` on divergence."""
+    m = LifecycleMachine(shared, options, dirpath)
+    m.check("initial state")
+    for i, op in enumerate(ops):
+        m.apply(op)
+        if check_every_step:
+            m.check(f"after op {i} {op!r}")
+    if not check_every_step:
+        m.check("final state")
+    return m
+
+
+def _fails(shared, ops, options, tmpdir_factory) -> bool:
+    d = str(tmpdir_factory())
+    try:
+        run_sequence(shared, ops, options, d)
+        return False
+    except ParityError:
+        return True
+
+
+def shrink(shared, ops: list[tuple], options, tmpdir_factory) -> list[tuple]:
+    """ddmin-lite: greedily drop chunks (halving sizes), then single ops,
+    as long as the remaining sequence still fails."""
+    current = list(ops)
+    chunk = max(1, len(current) // 2)
+    while chunk >= 1:
+        i = 0
+        while i < len(current):
+            candidate = current[:i] + current[i + chunk:]
+            if candidate and _fails(shared, candidate, options, tmpdir_factory):
+                current = candidate
+            else:
+                i += chunk
+        chunk //= 2
+    return current
+
+
+def run_seeded(shared, seed: int, n_ops: int, options,
+               tmpdir_factory) -> None:
+    """Run one seeded sequence; on parity failure, shrink it and raise
+    with a replayable reproducer."""
+    ops = ops_from_seed(seed, n_ops)
+    d = str(tmpdir_factory())
+    try:
+        run_sequence(shared, ops, options, d)
+    except ParityError as e:
+        minimal = shrink(shared, ops, options, tmpdir_factory)
+        err = ParityError(
+            f"lifecycle parity failure (seed={seed}); shrunk to "
+            f"{len(minimal)} op(s):\n  {minimal!r}\n"
+            f"replay: run_sequence(shared, {minimal!r}, options, tmpdir)\n"
+            f"original failure: {e}"
+        )
+        err.minimal = minimal
+        err.seed = seed
+        raise err from e

@@ -1,0 +1,334 @@
+"""Partition lifecycle plane: deletes, compaction, rebalancing (ISSUE 10).
+
+The contract under test: every lifecycle operation — soft-delete,
+compaction, rebalancing, plus snapshot/crash-restore at any WAL crash
+point — leaves the session's incrementally-folded derived state
+**bit-identical** to a from-scratch cold rebuild on the same physical
+table, with O(touched) work (no full rebuilds) and a flat compile
+census.  The proof is the randomized state machine in
+``lifecycle_machine.py``: bounded random op sequences, a parity check
+against the cold oracle after EVERY step, and ddmin-lite shrinking of
+failing sequences to a minimal replayable reproducer.
+
+Lanes:
+  * fast — ``LIFECYCLE_SEQUENCES`` (default 200) seeded sequences at
+    small size on the host backend; runs in tier-1 CI;
+  * mesh — the same machine on 1/2/8-device meshes (device backend);
+  * chaos — crash-heavy sequences on the forced 8-device mesh with
+    ``LIFECYCLE_SEED`` pinned (the nightly ``pytest -m lifecycle`` lane).
+
+Plus the satellite regressions: tombstone-aware fingerprints (a delete
+is not an out-of-band mutation), version-keyed WAL replay staying
+idempotent when deletes/compaction shrink the partition count, and a
+deliberately planted parity bug that the harness must catch and shrink.
+"""
+import itertools
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro import lifecycle, wal
+from repro.backends import ExecOptions
+from repro.core import sketches as sketches_mod
+from repro.data.datasets import make_dataset
+from repro.errors import InjectedCrash
+from repro.faults import FaultInjector, FaultPolicy
+from repro.queries.generator import WorkloadSpec
+
+from lifecycle_machine import (
+    CRASH_POINTS,
+    LifecycleMachine,
+    ParityError,
+    build_shared,
+    ops_from_seed,
+    run_seeded,
+    run_sequence,
+)
+
+pytestmark = pytest.mark.lifecycle
+
+SEED = int(os.environ.get("LIFECYCLE_SEED", "20260807"))
+FAST_SEQUENCES = int(os.environ.get("LIFECYCLE_SEQUENCES", "200"))
+HOST = ExecOptions(backend="host")
+PLANES = (None, 2, 8)
+
+
+def _plane_or_skip(plane):
+    if plane is not None and plane > len(jax.devices()):
+        pytest.skip(f"needs {plane} devices, have {len(jax.devices())} "
+                    "(CI sets XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    return plane
+
+
+@pytest.fixture(scope="module")
+def shared():
+    return build_shared(HOST, parts=8, rows=32, seed=SEED % 1000)
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    counter = itertools.count()
+
+    def factory():
+        d = tmp_path / f"seq{next(counter)}"
+        d.mkdir()
+        return str(d)
+
+    return factory
+
+
+# --------------------------------------------------------------------------
+# fast lane: many small randomized sequences against the cold oracle
+# --------------------------------------------------------------------------
+def test_fast_lane_randomized_parity(shared, dirs):
+    """≥200 seeded sequences of append/delete/compact/rebalance/snapshot/
+    crash-restore, every step byte-equal to the cold-rebuild oracle."""
+    for i in range(FAST_SEQUENCES):
+        run_seeded(shared, SEED + i, 4, HOST, dirs)
+
+
+def test_no_full_rebuilds_along_a_checked_sequence(shared, dirs):
+    """Lifecycle folding is O(touched): a crash-free sequence with a
+    query (= one derived sync) after every op never falls back to a
+    full sketch rebuild."""
+    ops = [
+        ("delete", 0.3, 2),
+        ("rebalance", 3),
+        ("append", 2, 41),
+        ("delete", 0.7, 1),
+        ("compact",),
+        ("rebalance", 2),
+        ("append", 1, 42),
+    ]
+    m = run_sequence(shared, ops, HOST, dirs())
+    assert m.sess.sketches.full_rebuilds == 0
+    assert m.sess.sketches.incremental_updates >= len(ops)
+    assert m.sess.stats()["num_live"] == m.sess.table.num_live
+
+
+# --------------------------------------------------------------------------
+# mesh lane: the same machine, device backend, 1/2/8-device meshes
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("plane", PLANES, ids=["single", "mesh2", "mesh8"])
+def test_mesh_parity(shared, dirs, plane):
+    _plane_or_skip(plane)
+    opts = ExecOptions(backend="device", mesh=plane)
+    for i in range(2):
+        run_seeded(shared, SEED + 1000 + i, 3, opts, dirs)
+
+
+def test_device_stack_rewritten_in_bucket(shared, dirs):
+    """Compaction/rebalance rewrite the main table's device stack in its
+    existing shape bucket (no drop/retrace, counted by
+    ``stack_rewrites``) and full-table answers stay bit-identical."""
+    from repro.queries.engine import per_partition_answers
+
+    opts = ExecOptions(backend="device")
+    m = LifecycleMachine(shared, opts, dirs())
+    q = shared.queries[0]
+    m.apply(("append", 2, 7))
+    m.sess.answers._eval_cache.device_stack()  # materialize the stack
+    m.apply(("delete", 0.2, 1))
+    m.apply(("compact",))
+    m.sess.answers.get(q)  # sync: the compact folds (rewrite #1); a
+    # compact+rebalance chain with NO sync between is deliberately
+    # non-foldable (the compact fold would read already-moved rows)
+    m.apply(("rebalance", 2))
+    live = m.sess.answers.get(q)
+    cold = per_partition_answers(m.sess.table, q, options=opts)
+    assert live.raw.tobytes() == cold.raw.tobytes()
+    assert live.group_keys.tobytes() == cold.group_keys.tobytes()
+    assert m.sess.stats()["stack_rewrites"] >= 2  # compact + rebalance
+    m.check("after stack rewrites")
+
+
+def test_same_seed_twice_compiles_nothing_new(shared, dirs):
+    """Flat compile census: replaying an identical sequence traces zero
+    new executables — lifecycle ops never mint new shape buckets."""
+    from repro.core import clustering, gbdt, ingest
+    from repro.distributed import dataplane
+    from repro.queries import device as qdevice
+
+    opts = ExecOptions(backend="device")
+    registries = (qdevice.TRACES, dataplane.TRACES, ingest.TRACES,
+                  clustering.TRACES, gbdt.TRACES)
+    run_sequence(shared, ops_from_seed(SEED + 2000, 4), opts, dirs())
+    before = [dict(r.counts()) for r in registries]
+    run_sequence(shared, ops_from_seed(SEED + 2000, 4), opts, dirs())
+    after = [dict(r.counts()) for r in registries]
+    assert before == after, "second identical run traced new executables"
+
+
+# --------------------------------------------------------------------------
+# chaos lane: crash-heavy sequences on the forced 8-device mesh
+# --------------------------------------------------------------------------
+def test_chaos_lane_crash_heavy_8dev(shared, dirs):
+    _plane_or_skip(8)
+    opts = ExecOptions(backend="device", mesh=8)
+    rng = np.random.default_rng(SEED)
+    for i in range(2):
+        ops = ops_from_seed(SEED + 3000 + i, 3)
+        # guarantee fault injection: a crash op at a seeded point
+        point = CRASH_POINTS[int(rng.integers(len(CRASH_POINTS)))]
+        ops.append(("crash", "delete", point, int(rng.integers(1 << 20))))
+        d = dirs()
+        try:
+            run_sequence(shared, ops, opts, d)
+        except ParityError as e:
+            raise AssertionError(f"chaos sequence {i} diverged: {e}") from e
+
+
+# --------------------------------------------------------------------------
+# the harness proves itself: a planted parity bug is caught and shrunk
+# --------------------------------------------------------------------------
+def test_planted_parity_bug_caught_and_shrunk(shared, dirs, monkeypatch):
+    """Plant a real-shaped bug — compaction/rebalance 'forget' to gather
+    the sketch rows — and require the harness to (a) catch it and
+    (b) shrink the failing sequence to ≤5 operations."""
+    monkeypatch.setattr(
+        sketches_mod, "gather_sketches", lambda sk, table, idx: sk
+    )
+    for seed in range(40):
+        if not any(o[0] in ("rebalance", "compact")
+                   for o in ops_from_seed(seed, 4)):
+            continue
+        try:
+            run_seeded(shared, seed, 4, HOST, dirs)
+        except ParityError as e:
+            assert len(e.minimal) <= 5, (
+                f"shrinker left {len(e.minimal)} ops: {e.minimal!r}"
+            )
+            assert any(o[0] in ("rebalance", "compact") for o in e.minimal)
+            return
+    raise AssertionError("planted sketch-staleness bug was never caught")
+
+
+# --------------------------------------------------------------------------
+# satellite: tombstone-aware fingerprint (delete is not an out-of-band
+# mutation) — delete-then-append-then-query must not raise StaleStateError
+# --------------------------------------------------------------------------
+def test_delete_is_not_out_of_band_mutation(shared, dirs):
+    m = LifecycleMachine(shared, HOST, dirs())
+    m.check("warm")  # caches populated against the pre-delete fingerprint
+    fp0 = m.sess.table.fingerprint()
+    m.apply(("delete", 0.4, 1))
+    assert m.sess.table.fingerprint() != fp0, (
+        "tombstones must be part of the table fingerprint"
+    )
+    m.check("after delete")  # would raise StaleStateError before the fix
+    m.apply(("append", 1, 17))
+    m.check("after delete+append")  # append folds across the delete event
+
+
+# --------------------------------------------------------------------------
+# satellite: version-keyed WAL replay under shrinking partition counts
+# --------------------------------------------------------------------------
+def _base_table(parts=10, seed=5):
+    t = make_dataset("kdd", num_partitions=parts, rows_per_partition=32,
+                     seed=seed)
+    lifecycle.ensure_directory(t)
+    return t
+
+
+def _delta_cols(parts=2, seed=9):
+    return dict(make_dataset("kdd", num_partitions=parts,
+                             rows_per_partition=32, layout="random",
+                             seed=seed).columns)
+
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_wal_crash_at_first_delete_record(tmp_path, point):
+    """Crash at every point of the FIRST delete record: recovery lands on
+    a consistent pre- or post-delete state and replay is idempotent."""
+    ref = _base_table()
+    log = wal.WriteAheadLog(str(tmp_path))
+    log.append(ref, _delta_cols())
+    victim_log = wal.WriteAheadLog(
+        str(tmp_path),
+        injector=FaultInjector(FaultPolicy(seed=SEED).with_crash(point)),
+    )
+    with pytest.raises(InjectedCrash):
+        victim_log.delete(ref, [3, 5])
+    recovered = _base_table()
+    wal.WriteAheadLog(str(tmp_path)).replay(recovered)
+    if point == "wal.record":
+        assert recovered.tombstones == set()  # delete never became durable
+    else:  # record durable before the crash: replay applies it
+        assert recovered.tombstones == {3, 5}
+    # idempotent: a second replay of the same log applies nothing
+    assert wal.WriteAheadLog(str(tmp_path)).replay(recovered) == 0
+
+
+def test_version_keyed_replay_survives_shrinking_partition_count(tmp_path):
+    """delete+compact returns the table to an earlier partition count;
+    the old ``parts_before`` keying would mis-skip records — version
+    keying replays the whole history exactly, twice."""
+    ref = _base_table()
+    log = wal.WriteAheadLog(str(tmp_path))
+    log.append(ref, _delta_cols(2, 11))     # 10 -> 12 partitions
+    log.delete(ref, [1, 4])
+    log.compact(ref)                        # back to 10 partitions
+    log.rebalance(ref, lifecycle.rebalance_plan(ref, 2))
+    log.delete(ref, [7])
+    log.append(ref, _delta_cols(1, 13))
+    recovered = _base_table()
+    assert wal.WriteAheadLog(str(tmp_path)).replay(recovered) == 6
+    assert recovered.version == ref.version
+    assert recovered.tombstones == ref.tombstones
+    assert recovered.ext_ids.tobytes() == ref.ext_ids.tobytes()
+    for k, v in ref.columns.items():
+        assert v.tobytes() == recovered.columns[k].tobytes(), k
+    assert wal.WriteAheadLog(str(tmp_path)).replay(recovered) == 0
+
+
+def test_snapshot_roundtrips_lifecycle_state(tmp_path):
+    """Tombstones, the partition directory and the lifecycle log all
+    survive save/restore bit-identically."""
+    t = _base_table()
+    sess = api.Session(t, options=HOST)
+    sess.prepare(WorkloadSpec(t, seed=1), num_train_queries=4)
+    sess.delete_partitions([2, 6])
+    sess.rebalance(num_shards=2)
+    sess.delete_partitions([3])
+    sess.save(str(tmp_path / "snap"))
+    back = api.Session.restore(str(tmp_path / "snap"), options=HOST)
+    assert back.table.tombstones == t.tombstones
+    assert back.table.ext_ids.tobytes() == t.ext_ids.tobytes()
+    assert back.table.next_ext == t.next_ext
+    assert back.table.lifecycle_log == t.lifecycle_log
+    for k, v in t.columns.items():
+        assert v.tobytes() == back.table.columns[k].tobytes(), k
+
+
+# --------------------------------------------------------------------------
+# lifecycle op validation (the directory keeps callers honest)
+# --------------------------------------------------------------------------
+def test_lifecycle_op_validation():
+    t = _base_table(parts=4)
+    with pytest.raises(KeyError):
+        lifecycle.delete_partitions(t, [99])
+    with pytest.raises(ValueError, match="duplicate"):
+        lifecycle.delete_partitions(t, [1, 1])
+    lifecycle.delete_partitions(t, [1])
+    with pytest.raises(ValueError, match="already deleted"):
+        lifecycle.delete_partitions(t, [1])
+    with pytest.raises(ValueError, match="last live"):
+        lifecycle.delete_partitions(t, [0, 2, 3])
+    with pytest.raises(ValueError, match="permutation"):
+        lifecycle.rebalance(t, np.array([0, 0, 1, 2]))
+    # external ids survive compaction; the physical slots shift
+    keep = lifecycle.compact(t)
+    assert keep.tolist() == [0, 2, 3]
+    assert t.ext_ids.tolist() == [0, 2, 3]
+    assert lifecycle.resolve(t, [3]).tolist() == [2]
+    # WAL-level validation happens before the record is durable
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        log = wal.WriteAheadLog(d)
+        with pytest.raises(ValueError):
+            log.delete(t, [0, 2, 3])  # last-live guard
+        assert log._record_ids() == []  # nothing was written

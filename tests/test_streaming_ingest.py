@@ -408,3 +408,86 @@ def test_concat_tables_pure_form_untouched():
     out = concat_tables([table, table])
     assert out is not table and out.num_partitions == 6
     assert table.version == 0 and out.version == 0 and out.append_log == {}
+
+
+# --------------------------------------------------------------------------
+# merge primitives under compaction-shaped inputs (lifecycle plane)
+# --------------------------------------------------------------------------
+def test_merge_discrete_span_cap_disqualification():
+    """The span union disqualifies exactly at the width cap — the rule
+    compaction's re-qualification shares with the append path."""
+    cap = ingest.MAX_DISCRETE_WIDTH
+    assert ingest.merge_discrete_span((0, 10), (5, 20)) == (0, 20)
+    # union exactly at the cap still qualifies; one past it does not
+    assert ingest.merge_discrete_span((0, cap - 1), (0, 0)) == (0, cap - 1)
+    assert ingest.merge_discrete_span((0, cap), (0, 0)) is None
+    assert ingest.merge_discrete_span((-4, 0), (cap - 4, cap - 4)) is None
+    # a disqualified side poisons the union (and never un-poisons)
+    assert ingest.merge_discrete_span(None, (0, 1)) is None
+    assert ingest.merge_discrete_span((0, 1), None) is None
+
+
+def test_fold_partition_spans_requalifies_survivors():
+    """Per-partition spans re-fold after a gather: dropping the wide
+    partition re-qualifies the survivors — a compact can only REqualify,
+    never disqualify, because the survivor union is a subset."""
+    wide = np.array([[0.0] * 31 + [float(ingest.MAX_DISCRETE_WIDTH)]])
+    narrow = np.tile(np.arange(32, dtype=np.float64)[None, :], (3, 1))
+    data = np.concatenate([narrow, wide], axis=0)
+    spans = ingest.partition_int_spans(data)
+    assert ingest.fold_partition_spans(spans) is None  # cap exceeded
+    survivors = spans[:3]  # the compacted gather drops the wide partition
+    assert ingest.fold_partition_spans(survivors) == (0, 32)
+    # a non-integral partition stays disqualified through any gather
+    frac = ingest.partition_int_spans(np.array([[0.5] * 4]))
+    assert frac[0, 2] == 0
+    assert ingest.fold_partition_spans(
+        np.concatenate([survivors, frac], axis=0)
+    ) is None
+
+
+def test_akmv_union_duplicate_heavy_partitions():
+    """K-min union over duplicate-heavy chunks — the shape compaction
+    feeds the AKMV merge when most surviving rows share values: retained
+    hash multiplicities must ADD exactly, bit-identical to one shot."""
+    rng = np.random.default_rng(17)
+    # 4 partitions, 300 rows, only 6 distinct values → every hash is
+    # retained on both sides with large multiplicities
+    col = rng.integers(0, 6, size=(4, 300)).astype(np.float64)
+    for cut in (1, 150, 299):
+        merged = merge_akmv_states(
+            akmv_state(col[:, :cut]), akmv_state(col[:, cut:])
+        )
+        ndv, freq = akmv_finalize(merged)
+        ndv0, freq0 = _akmv(col)
+        np.testing.assert_array_equal(ndv, ndv0)
+        np.testing.assert_array_equal(freq, freq0)
+    # associativity across a 3-way merge (compaction folds many chunks)
+    thirds = [col[:, :100], col[:, 100:200], col[:, 200:]]
+    left = merge_akmv_states(
+        merge_akmv_states(akmv_state(thirds[0]), akmv_state(thirds[1])),
+        akmv_state(thirds[2]),
+    )
+    ndv, freq = akmv_finalize(left)
+    np.testing.assert_array_equal(ndv, _akmv(col)[0])
+    np.testing.assert_array_equal(freq, _akmv(col)[1])
+
+
+def test_merge_primitives_accept_empty_partition_batches():
+    """Zero-partition inputs (an empty append, or compacting everything
+    but one slot) flow through every merge primitive without special
+    cases and produce shape-correct empty results."""
+    empty = np.empty((0, 64))
+    m = ingest.merge_moments(np.empty((0, 8)), np.empty((0, 8)))
+    assert m.shape == (0, 8)
+    merged, lo = ingest.merge_bincounts(
+        np.zeros((0, 5)), np.zeros((0, 3)), lo_a=2, lo_b=0
+    )
+    assert merged.shape == (0, 7) and lo == 0
+    state = akmv_state(empty)
+    h, c, d = merge_akmv_states(state, akmv_state(empty))
+    assert h.shape[0] == 0 and c.shape[0] == 0 and d.shape == (0,)
+    ndv, freq = akmv_finalize((h, c, d))
+    assert ndv.shape == (0,) and freq.shape == (0, 4)
+    assert ingest.partition_int_spans(empty).shape == (0, 3)
+    assert ingest.fold_partition_spans(np.zeros((0, 3), np.int64)) is None
